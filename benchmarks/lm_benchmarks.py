@@ -1,0 +1,58 @@
+"""LM-side microbenchmarks (CPU wall times are sanity signals; TPU
+performance is assessed structurally by the dry-run roofline)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.configs import get_smoke_config
+from repro.models import model as model_lib
+from repro.models import steps as steps_lib
+from repro.optim import adamw_init
+
+
+def train_step_smoke(archs=("llama3-8b", "mamba2-370m",
+                            "granite-moe-1b-a400m")) -> None:
+    rng = np.random.default_rng(0)
+    for arch in archs:
+        cfg = get_smoke_config(arch)
+        params = model_lib.init_params(cfg, jax.random.key(0))
+        opt = adamw_init(params)
+        batch = {"tokens": jnp.asarray(
+                     rng.integers(0, cfg.vocab_size, (4, 64)), jnp.int32),
+                 "labels": jnp.asarray(
+                     rng.integers(0, cfg.vocab_size, (4, 64)), jnp.int32)}
+        step = jax.jit(steps_lib.make_train_step(cfg, num_microbatches=2))
+        state = [params, opt]
+
+        def go():
+            p, o, m = step(state[0], state[1], batch)
+            state[0], state[1] = p, o
+            return m["loss"]
+
+        t = timeit(go)
+        row("lm_train", arch, "step_s", t,
+            f"{4 * 64 / t:.0f} tok/s (reduced cfg, CPU)")
+
+
+def attention_impls(seq=512) -> None:
+    from repro.models.attention import attention
+    rng = np.random.default_rng(0)
+    B, Hq, Hkv, D = 2, 4, 2, 64
+    q = jnp.asarray(rng.normal(size=(B, seq, Hq, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, seq, Hkv, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, seq, Hkv, D)), jnp.float32)
+    for impl in ("dense", "chunked"):
+        f = jax.jit(lambda q, k, v, impl=impl: attention(
+            q, k, v, causal=True, impl=impl, chunk_size=128))
+        t = timeit(lambda: f(q, k, v))
+        row("lm_attention", impl, "wall_s", t, f"S={seq}")
+
+
+def decode_throughput(arch="qwen3-1.7b", gen=8) -> None:
+    from repro.launch.serve import serve_batch
+    out = serve_batch(arch, num_requests=4, prompt_len=32, gen_len=gen)
+    row("lm_serve", arch, "decode_tok_per_s", out["tok_per_s"],
+        "reduced cfg, CPU")

@@ -1,0 +1,68 @@
+"""Roofline table from the dry-run JSONs (EXPERIMENTS.md §Roofline).
+
+Reads experiments/dryrun/*.json and prints, per (arch x shape x mesh):
+the three roofline terms (seconds), the dominant term, MODEL_FLOPS,
+the useful-compute ratio, and what would move the dominant term down.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+HINT = {
+    "memory_s": ("shrink HBM traffic: bf16 embed cast, sequence-"
+                 "parallel activations, fewer remat recomputes"),
+    "compute_s": "raise MXU occupancy: larger per-device tiles",
+    "collective_s": ("overlap/shrink collectives: 2-step AR, int8 "
+                     "pod-axis compression, collective matmul"),
+}
+
+
+def load(dirname: str = "experiments/dryrun") -> list[dict]:
+    out = []
+    for f in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        if f.endswith(".fail.json"):
+            continue
+        with open(f) as fh:
+            out.append(json.load(fh))
+    return out
+
+
+def table(dirname: str = "experiments/dryrun", mesh: str | None = "16x16"
+          ) -> str:
+    hdr = ("| arch | shape | mesh | compute_s | memory_s | collective_s "
+           "| dominant | MODEL_TF | useful | frac |")
+    rows = [hdr, "|" + "---|" * 10]
+    for r in load(dirname):
+        if mesh and r.get("mesh") != mesh:
+            continue
+        rl = r["roofline"]
+        mf = r["model_flops"]["total"] / 1e12
+        useful = rl.get("useful_ratio")
+        u = f"{useful:.2f}" if useful else "n/a"
+        fr = rl.get("roofline_fraction")
+        fs = f"{fr:.3f}" if fr is not None else "n/a"
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {rl['compute_s']:.4f} | {rl['memory_s']:.4f} "
+            f"| {rl['collective_s']:.4f} | {rl['dominant']} "
+            f"| {mf:.1f} | {u} | {fs} |")
+    return "\n".join(rows)
+
+
+def main() -> None:
+    print(table(mesh=None))
+    data = load()
+    if data:
+        doms = {}
+        for r in data:
+            doms[r["roofline"]["dominant"]] = \
+                doms.get(r["roofline"]["dominant"], 0) + 1
+        print(f"\n# dominant-term histogram: {doms}")
+        for term, hint in HINT.items():
+            print(f"# {term}: {hint}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Benchmark orchestrator: one section per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--quick]``
+
+CSV rows: table,name,metric,value,derived. The roofline section reads
+the dry-run artifacts (run ``python -m repro.launch.dryrun --all``
+first for the full table; missing artifacts are reported, not fatal).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller sweeps (CI mode)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated section names")
+    args = ap.parse_args()
+
+    from benchmarks import lm_benchmarks, q_benchmarks
+
+    sections = {
+        "fig5_vs_saxon": lambda: q_benchmarks.fig5_vs_saxon(
+            ("Q1", "Q4") if args.quick else
+            ("Q1", "Q2", "Q3", "Q4", "Q5")),
+        "fig10_vs_mrql": lambda: q_benchmarks.fig10_vs_mrql(
+            ("Q4", "Q8") if args.quick else
+            ("Q1", "Q3", "Q4", "Q5", "Q8")),
+        "fig56_speedup": lambda: q_benchmarks.fig56_speedup(
+            ("Q4",) if args.quick else ("Q2", "Q4"),
+            (1, 4) if args.quick else (1, 2, 4, 8)),
+        "fig89_scaleup": lambda: q_benchmarks.fig89_scaleup(
+            ("Q4",) if args.quick else ("Q2", "Q4"),
+            (1, 4) if args.quick else (1, 2, 4, 8)),
+        "ablation": q_benchmarks.ablation,
+        "ingest": q_benchmarks.ingest,
+        "lm_train": lm_benchmarks.train_step_smoke,
+        "lm_attention": lm_benchmarks.attention_impls,
+        "lm_serve": lm_benchmarks.decode_throughput,
+        "roofline": _roofline,
+    }
+    chosen = (args.only.split(",") if args.only else list(sections))
+    print("table,name,metric,value,derived")
+    failures = []
+    for name in chosen:
+        try:
+            sections[name]()
+        except Exception as e:
+            failures.append(name)
+            print(f"# SECTION FAILED {name}: {type(e).__name__}: {e}",
+                  file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"failed sections: {failures}")
+
+
+def _roofline() -> None:
+    import os
+    from benchmarks import roofline
+    if not os.path.isdir("experiments/dryrun") or not os.listdir(
+            "experiments/dryrun"):
+        print("# roofline: no dry-run artifacts; run "
+              "`python -m repro.launch.dryrun --all` first")
+        return
+    roofline.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,112 @@
+"""Shared helpers for architecture configs: shape cells + input specs.
+
+Every architecture supports up to 4 input-shape cells; skips are explicit
+and documented (DESIGN.md §5):
+  train_4k     seq=4096   gb=256  (training)
+  prefill_32k  seq=32768  gb=32   (inference prefill)
+  decode_32k   seq=32768  gb=128  (decode: 1 new token vs full KV)
+  long_500k    seq=524288 gb=1    (long-context decode; sub-quadratic only)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import ModelConfig, init_cache
+
+SHAPES: dict[str, dict] = {
+    "train_4k": {"seq": 4096, "batch": 256, "kind": "train"},
+    "prefill_32k": {"seq": 32768, "batch": 32, "kind": "prefill"},
+    "decode_32k": {"seq": 32768, "batch": 128, "kind": "decode"},
+    "long_500k": {"seq": 524288, "batch": 1, "kind": "decode"},
+}
+
+# Documented skips, with reasons (mirrored in DESIGN.md §5).
+SKIPS: dict[tuple[str, str], str] = {
+    ("llama3-8b", "long_500k"): "pure full attention (quadratic)",
+    ("qwen3-1.7b", "long_500k"): "pure full attention (quadratic)",
+    ("granite-moe-1b-a400m", "long_500k"): "pure full attention (quadratic)",
+    ("llama4-scout-17b-a16e", "long_500k"): "pure full attention (quadratic)",
+    ("qwen2-vl-2b", "long_500k"): "pure full attention (quadratic)",
+    ("hubert-xlarge", "decode_32k"): "encoder-only: no decode step",
+    ("hubert-xlarge", "long_500k"): "encoder-only: no decode step",
+}
+
+
+def supported(arch: str, shape: str) -> bool:
+    return (arch, shape) not in SKIPS
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of a shape cell.
+
+    Returns {"batch": ..., "caches": ..., ...} keyed by the step's kwargs;
+    no device allocation happens here.
+    """
+    sh = SHAPES[shape_name]
+    b, s = sh["batch"], sh["seq"]
+    kind = sh["kind"]
+    i32 = jnp.int32
+
+    def batch_for(seq_b, seq_s, with_labels):
+        if cfg.frontend == "frames":
+            d = {"frames": _sds((seq_b, seq_s, cfg.frontend_dim),
+                                jnp.float32)}
+        elif cfg.frontend == "patches":
+            n_patch = max(seq_s // 4, 1)
+            n_tok = seq_s - n_patch
+            d = {"tokens": _sds((seq_b, n_tok), i32),
+                 "patches": _sds((seq_b, n_patch, cfg.frontend_dim),
+                                 jnp.float32),
+                 "positions": _sds((3, seq_b, seq_s), i32)}
+        else:
+            d = {"tokens": _sds((seq_b, seq_s), i32)}
+        if with_labels:
+            d["labels"] = _sds((seq_b, seq_s if cfg.frontend != "patches"
+                                else seq_s - max(seq_s // 4, 1)), i32)
+        return d
+
+    if kind == "train":
+        return {"batch": batch_for(b, s, True)}
+    if kind == "prefill":
+        return {"batch": batch_for(b, s, False)}
+    if kind == "decode":
+        caches = init_cache(cfg, b, s, abstract=True)
+        return {"caches": caches,
+                "tokens": _sds((b, 1), i32),
+                "kv_len": _sds((b,), i32)}
+    raise ValueError(kind)
+
+
+def reduce_for_smoke(cfg: ModelConfig, **over) -> ModelConfig:
+    """Tiny same-family variant for CPU smoke tests."""
+    nl = cfg.period * 2
+    changes = dict(
+        num_layers=nl,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=min(cfg.num_kv_heads, 2),
+        head_dim=16,
+        d_ff=128 if cfg.d_ff else 0,
+        vocab_size=128,
+        window=8 if cfg.window else 0,
+        ssm_state=16 if cfg.ssm_state else 0,
+        ssm_head_dim=16 if cfg.ssm_state else 64,
+        ssm_chunk=8 if cfg.ssm_state else 256,
+        num_experts=4 if cfg.num_experts else 0,
+        top_k=min(cfg.top_k, 2) if cfg.top_k else 0,
+        d_ff_expert=32 if cfg.d_ff_expert else 0,
+        frontend_dim=24 if cfg.frontend_dim else 0,
+        mrope_sections=(2, 3, 3) if cfg.mrope_sections else (),
+        attn_chunk=16,
+        ce_chunks=2,
+        remat=False,
+    )
+    changes.update(over)
+    return dataclasses.replace(cfg, **changes)

@@ -1,0 +1,15 @@
+"""Apache VXQuery on JAX — the paper's contribution as a library.
+
+Layers (paper Fig. 1): xqparser/translator (VXQuery front),
+algebra + rewrite (Algebricks), physical/executor (Hyracks -> SPMD
+JAX over the mesh ``data`` axis). See DESIGN.md.
+"""
+from repro.core import algebra, xdm  # noqa: F401
+from repro.core.executor import ExecConfig, Executor, ResultSet  # noqa: F401
+from repro.core.rewrite import optimize  # noqa: F401
+from repro.core.translator import translate  # noqa: F401
+
+
+def compile_query(query: str):
+    """parse + normalize + optimize: query text -> physical-ready plan."""
+    return optimize(translate(query))

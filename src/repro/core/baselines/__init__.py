@@ -1,0 +1,2 @@
+from repro.core.baselines.saxon_like import SaxonLike  # noqa: F401
+from repro.core.baselines.mrql_like import MrqlLike  # noqa: F401

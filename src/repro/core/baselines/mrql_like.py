@@ -1,0 +1,320 @@
+"""Apache-MRQL-on-Hadoop stand-in: staged MapReduce execution.
+
+Same optimized logical plan as the VXQuery executor, but run the way a
+MapReduce stack runs it (paper §2, §5.3.2):
+
+  * map tasks = per-partition operator evaluation, *eager* (no XLA
+    fusion across operators; each jnp op dispatches separately — the
+    analogue of record-at-a-time map tasks without codegen);
+  * every job boundary **materializes to host numpy** (Hadoop's
+    write-map-output-to-disk; mapper and reducer share no state);
+  * joins are **Grace hash joins**: map-side partitioning, host
+    shuffle, reducer-side per-bucket join — versus the executor's
+    hybrid hash (build side stays device-resident, one fused program);
+  * aggregation over joins happens in the reducer (host), as Hadoop
+    reducers do.
+
+This is a structural analogue, not a Hadoop deployment (DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.core import algebra as A
+from repro.core import xdm
+from repro.core.executor import Comm, ExecConfig, Executor, node_fingerprint
+from repro.core.physical import ExprEval, Tile
+
+
+@dataclasses.dataclass
+class MrqlResult:
+    _rows: list[tuple]
+    overflow: bool
+    jobs: int
+
+    def rows(self) -> list[tuple]:
+        return self._rows
+
+    def scalar(self) -> float:
+        assert len(self._rows) == 1 and len(self._rows[0]) == 1
+        return float(self._rows[0][0])
+
+
+class MrqlLike:
+    def __init__(self, db: xdm.Database,
+                 config: Optional[ExecConfig] = None):
+        self.db = db
+        self.config = config or ExecConfig()
+        self.ex = Executor(self.db, self.config)
+        self.local_comm = Comm(None)
+
+    # -- task plumbing -----------------------------------------------------
+
+    def _tables_at(self, p: int) -> dict:
+        out = {}
+        for k, v in self.ex.tables.items():
+            out[k] = v if k == "__derived__" else \
+                jax.tree.map(lambda a: a[p], v)
+        return out
+
+    def _map_task(self, op: A.Op, part: int,
+                  key_exprs: tuple = ()) -> dict:
+        """Evaluate a local operator chain eagerly; materialize tile +
+        join keys to host (the shuffle write)."""
+        ev = ExprEval(self.db, self._tables_at(part))
+        tile = self.ex._eval(op, ev, self.local_comm, None, self.config)
+        cols = {}
+        for v, c in tile.cols.items():
+            if c.kind in ("node", "atom"):
+                d = ev.detach(c)
+                cols[v] = {"kind": "node", "idx": np.asarray(c.data),
+                           "table": c.table,
+                           "num": np.asarray(d.data[0]),
+                           "sid": np.asarray(d.data[1]),
+                           "date": np.asarray(d.data[2])}
+            elif c.kind == "det":
+                cols[v] = {"kind": "det",
+                           "num": np.asarray(c.data[0]),
+                           "sid": np.asarray(c.data[1]),
+                           "date": np.asarray(c.data[2])}
+            else:
+                cols[v] = {"kind": c.kind, "data": np.asarray(c.data)}
+        keys = []
+        for ke in key_exprs:
+            kc = ev.eval(ke, tile.cols)
+            sid = np.asarray(ev.atom_sid(kc)).astype(np.int64)
+            date = np.asarray(ev.atom_date(kc)).astype(np.int64)
+            keys.append(np.where(sid >= 0, sid, (1 << 40) + date))
+        return {"cols": cols, "valid": np.asarray(tile.valid),
+                "overflow": bool(np.asarray(tile.overflow)),
+                "keys": keys, "part": part}
+
+    # -- value decoding -------------------------------------------------------
+
+    def _value(self, col: dict, part: int, r: int):
+        if col["kind"] == "node":
+            return node_fingerprint(self.db, col["table"], part,
+                                    int(col["idx"][r]))
+        if col["kind"] == "det":
+            sid = int(col["sid"][r])
+            if sid >= 0:
+                return self.db.strings.str(sid)
+            return float(col["num"][r])
+        if col["kind"] == "num":
+            return float(col["data"][r])
+        if col["kind"] == "str":
+            sid = int(col["data"][r])
+            return self.db.strings.str(sid) if sid >= 0 else None
+        raise TypeError(col["kind"])
+
+    def _num_of(self, col: dict, r: int) -> float:
+        if col["kind"] in ("node", "det"):
+            return float(col["num"][r])
+        return float(col["data"][r])
+
+    # -- wrapper resolution -----------------------------------------------------
+
+    @staticmethod
+    def _resolve(wrappers: list[A.Op], var: int
+                 ) -> tuple[int, float]:
+        """Follow top-level iterate/divide wrappers down to the
+        producing var; returns (source var, post-scale divisor)."""
+        scale = 1.0
+        for w in wrappers:
+            dv = A.defined_var(w)
+            if dv != var:
+                continue
+            e = w.expr
+            if isinstance(e, A.Call) and e.fn == "iterate" \
+                    and isinstance(e.args[0], A.Var):
+                var = e.args[0].n
+            elif isinstance(e, A.Var):
+                var = e.n
+            elif isinstance(e, A.Call) and e.fn == "divide" \
+                    and isinstance(e.args[0], A.Var):
+                scale *= float(e.args[1].value)
+                var = e.args[0].n
+        return var, scale
+
+    # -- driver -------------------------------------------------------------------
+
+    def run(self, plan: A.Op) -> MrqlResult:
+        assert isinstance(plan, A.DistributeResult)
+        p = self.ex.num_partitions
+        body = plan.child
+        wrappers: list[A.Op] = []
+        while isinstance(body, (A.Unnest, A.Assign)):
+            wrappers.append(body)
+            body = body.child
+
+        agg: Optional[A.Aggregate] = None
+        if isinstance(body, A.Subplan):
+            agg = body.plan
+            assert isinstance(agg, A.Aggregate)
+            inner = agg.child
+        else:
+            inner = body
+
+        if isinstance(inner, A.Join):
+            return self._run_join(plan, wrappers, agg, inner, p)
+        if agg is not None:
+            return self._run_aggregate(plan, wrappers, agg, p)
+        return self._run_selection(plan, wrappers, inner, p)
+
+    def _run_selection(self, plan, wrappers, body, p) -> MrqlResult:
+        rows, overflow = [], False
+        for part in range(p):                     # one map job
+            t = self._map_task(body, part)
+            overflow |= t["overflow"]
+            for r in np.nonzero(t["valid"])[0]:
+                row = []
+                for v in plan.vars:
+                    src, _ = self._resolve(wrappers, v)
+                    row.append(self._value(t["cols"][src], part, int(r)))
+                rows.append(tuple(row))
+        return MrqlResult(rows, overflow, jobs=1)
+
+    def _run_aggregate(self, plan, wrappers, agg, p) -> MrqlResult:
+        fn = agg.expr.fn
+        arg = agg.expr.args[0]
+        if isinstance(arg, A.Call) and arg.fn == "treat":
+            arg = arg.args[0]
+        partials, overflow = [], False
+        for part in range(p):                     # map job: local agg
+            ev = ExprEval(self.db, self._tables_at(part))
+            tile = self.ex._eval(agg.child, ev, self.local_comm, None,
+                                 self.config)
+            overflow |= bool(np.asarray(tile.overflow))
+            valid = np.asarray(tile.valid)
+            if fn == "count":
+                partials.append(("c", float(valid.sum())))
+            else:
+                v = np.asarray(ev.atom_num(ev.eval(arg, tile.cols)))
+                ok = valid & ~np.isnan(v)
+                partials.append((fn, v[ok]))
+        total = self._combine(fn, partials)       # reduce job
+        (var,) = plan.vars
+        _, scale = self._resolve(wrappers, var)
+        return MrqlResult([(total / scale,)], overflow, jobs=2)
+
+    @staticmethod
+    def _combine(fn: str, partials) -> float:
+        if fn == "count":
+            return float(sum(x for _, x in partials))
+        vals = np.concatenate([v for _, v in partials]) \
+            if partials else np.zeros(0)
+        if fn == "sum":
+            return float(vals.sum())
+        if fn == "min":
+            return float(vals.min())
+        if fn == "max":
+            return float(vals.max())
+        if fn == "avg":
+            return float(vals.mean())
+        raise ValueError(fn)
+
+    def _run_join(self, plan, wrappers, agg, join: A.Join, p
+                  ) -> MrqlResult:
+        lkeys = tuple(le for le, _ in join.hash_keys)
+        rkeys = tuple(re for _, re in join.hash_keys)
+        # map job 1: build side; map job 2: probe side (shuffle writes)
+        left = [self._map_task(join.left, part, lkeys)
+                for part in range(p)]
+        right = [self._map_task(join.right, part, rkeys)
+                 for part in range(p)]
+        overflow = any(t["overflow"] for t in left + right)
+
+        # shuffle + reducer-side grace join (host)
+        def flatten(tasks):
+            keys = np.stack([np.concatenate([t["keys"][i] for t in tasks])
+                             for i in range(len(tasks[0]["keys"]))])
+            valid = np.concatenate([t["valid"] for t in tasks])
+            parts = np.concatenate([np.full(t["valid"].shape, t["part"])
+                                    for t in tasks])
+            rows = np.concatenate([np.arange(t["valid"].shape[0])
+                                   for t in tasks])
+            return keys, valid, parts, rows
+
+        bk, bvalid, bpart, brow = flatten(left)
+        pk, pvalid, ppart, prow = flatten(right)
+        comb_b = bk[0] if bk.shape[0] == 1 else bk[0] * (1 << 41) + bk[1]
+        comb_p = pk[0] if pk.shape[0] == 1 else pk[0] * (1 << 41) + pk[1]
+        comb_b = np.where(bvalid, comb_b, np.int64(-(1 << 60)))
+        lut = {int(k): i for i, k in enumerate(comb_b) if bvalid[i]}
+        match = np.asarray([lut.get(int(k), -1) if v else -1
+                            for k, v in zip(comb_p, pvalid)])
+        sel = match >= 0
+        jobs = 3   # 2 map jobs + 1 reduce (join) job
+
+        if agg is None:
+            rows = []
+            for i in np.nonzero(sel)[0]:
+                b = match[i]
+                row = []
+                for v in plan.vars:
+                    src, _ = self._resolve(wrappers, v)
+                    if src in right[0]["cols"]:
+                        t = right[int(ppart[i])]
+                        row.append(self._value(t["cols"][src],
+                                               int(ppart[i]),
+                                               int(prow[i])))
+                    else:
+                        t = left[int(bpart[b])]
+                        row.append(self._value(t["cols"][src],
+                                               int(bpart[b]),
+                                               int(brow[b])))
+                rows.append(tuple(row))
+            return MrqlResult(rows, overflow, jobs)
+
+        # aggregate over the joined stream (reducer-side)
+        fn = agg.expr.fn
+        arg = agg.expr.args[0]
+        if isinstance(arg, A.Call) and arg.fn == "treat":
+            arg = arg.args[0]
+        vals = []
+        for i in np.nonzero(sel)[0]:
+            b = match[i]
+            env_val = self._agg_value(arg, left, right,
+                                      int(bpart[b]), int(brow[b]),
+                                      int(ppart[i]), int(prow[i]))
+            if env_val is not None and not np.isnan(env_val):
+                vals.append(env_val)
+        jobs += 1
+        total = self._combine(fn if fn != "count" else "count",
+                              [(fn, np.asarray(vals))] if fn != "count"
+                              else [("c", float(len(vals)))])
+        (var,) = plan.vars
+        _, scale = self._resolve(wrappers, var)
+        return MrqlResult([(total / scale,)], overflow, jobs)
+
+    def _agg_value(self, e: A.Expr, left, right, bp, br, pp, pr
+                   ) -> Optional[float]:
+        """Evaluate the aggregate's argument expression on one joined
+        row (reducer-side scalar evaluation)."""
+        if isinstance(e, A.Var):
+            col, part, row = self._locate(e.n, left, right, bp, br, pp, pr)
+            return self._num_of(col, row)
+        if isinstance(e, A.Call):
+            if e.fn == "data":
+                return self._agg_value(e.args[0], left, right,
+                                       bp, br, pp, pr)
+            if e.fn in ("add", "subtract", "multiply", "divide"):
+                a = self._agg_value(e.args[0], left, right, bp, br, pp, pr)
+                b = self._agg_value(e.args[1], left, right, bp, br, pp, pr)
+                if e.fn == "add":
+                    return a + b
+                if e.fn == "subtract":
+                    return a - b
+                if e.fn == "multiply":
+                    return a * b
+                return a / b
+        raise NotImplementedError(str(e))
+
+    def _locate(self, var: int, left, right, bp, br, pp, pr):
+        if var in right[0]["cols"]:
+            return right[pp]["cols"][var], pp, pr
+        return left[bp]["cols"][var], bp, br

@@ -1,0 +1,646 @@
+"""Plan executor: logical plan -> one fused SPMD JAX function.
+
+Execution model (DESIGN.md §2): a query compiles to a *local* function
+over one partition's node tables. Partitioned parallelism is the same
+function run under
+
+  * ``jax.vmap(..., axis_name="data")``  — cluster simulation on one
+    device (tests/benchmarks; collectives become batched reductions)
+  * ``shard_map(..., mesh, axis "data")`` — real SPMD over the mesh
+    (multi-device runs and the 512-way dry-run)
+
+with identical ``lax`` collectives inside (psum for two-step
+aggregation, all_gather for the hybrid-hash build broadcast, all_to_all
+for grace-style repartition). This mirrors how a Hyracks job runs the
+same operator pipeline on every node with connectors in between.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core import algebra as A
+from repro.core import xdm
+from repro.core.physical import (Col, ExprEval, Tile, _gather,
+                                 device_tables, path_match_mask,
+                                 rows_from_mask)
+
+I32 = jnp.int32
+F32 = jnp.float32
+
+
+@dataclasses.dataclass
+class ExecConfig:
+    scan_cap: Optional[int] = None        # None: padded table size
+    join_cap: Optional[int] = None        # probe-side output capacity
+    join_strategy: str = "broadcast"      # broadcast | repartition
+    join_bucket: int = 4                  # hash-bucket probe width
+    use_pallas_join: bool = False         # route probe through kernels/
+
+
+class Comm:
+    """Collective surface, identical under vmap and shard_map."""
+
+    def __init__(self, axis: Optional[str]):
+        self.axis = axis
+
+    def psum(self, x):
+        return lax.psum(x, self.axis) if self.axis else x
+
+    def pmax(self, x):
+        if not self.axis:
+            return x
+        return jnp.max(self.all_gather(x), axis=0)
+
+    def pmin(self, x):
+        if not self.axis:
+            return x
+        return jnp.min(self.all_gather(x), axis=0)
+
+    def all_gather(self, x):
+        if not self.axis:
+            return x[None] if hasattr(x, "ndim") else jnp.asarray(x)[None]
+        return lax.all_gather(x, self.axis)
+
+    def por(self, x):
+        return self.psum(x.astype(I32)) > 0
+
+    def index(self):
+        return lax.axis_index(self.axis) if self.axis else jnp.int32(0)
+
+    def size(self) -> int:
+        if not self.axis:
+            return 1
+        return lax.axis_size(self.axis)
+
+
+# ---------------------------------------------------------------------------
+# Join machinery
+# ---------------------------------------------------------------------------
+
+def _hash_keys(keys: tuple[jnp.ndarray, ...]) -> jnp.ndarray:
+    """Mix int32 key columns into one int32 hash (verified exactly at
+    probe time, so collisions cost a bucket slot, not correctness)."""
+    h = jnp.zeros_like(keys[0], dtype=jnp.uint32)
+    for k in keys:
+        h = (h ^ k.astype(jnp.uint32)) * jnp.uint32(2654435761)
+        h = h ^ (h >> 15)
+    return h.astype(I32)
+
+
+def hash_join_probe(build_keys: tuple[jnp.ndarray, ...],
+                    build_valid: jnp.ndarray,
+                    probe_keys: tuple[jnp.ndarray, ...],
+                    probe_valid: jnp.ndarray,
+                    bucket: int,
+                    use_pallas: bool = False
+                    ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Match each probe row to a build row with equal keys.
+
+    Returns (build_pos [T] int32 with -1 for no match, matched [T] bool,
+    bucket_overflow bool). Build keys are assumed unique among valid
+    rows (M:1 join — the paper's queries; duplicates would surface as
+    arbitrary-match, flagged by callers via key-uniqueness checks in
+    tests). Sorted-hash + verified bucket probe — the jnp reference
+    for kernels/hash_join.py.
+    """
+    if use_pallas:
+        from repro.kernels import ops as kops
+        return kops.hash_join_probe(build_keys, build_valid, probe_keys,
+                                    probe_valid, bucket=bucket)
+    nb = build_keys[0].shape[0]
+    hb = _hash_keys(build_keys)
+    hb = jnp.where(build_valid, hb, jnp.int32(np.iinfo(np.int32).max))
+    order = jnp.argsort(hb)
+    hs = hb[order]
+    hp = _hash_keys(probe_keys)
+    lo = jnp.searchsorted(hs, hp)
+    hi = jnp.searchsorted(hs, hp, side="right")
+    bucket_overflow = jnp.any((hi - lo) > bucket) & jnp.any(probe_valid)
+    pos = jnp.full(probe_keys[0].shape, -1, I32)
+    for j in range(bucket):
+        cand = jnp.clip(lo + j, 0, nb - 1)
+        bidx = order[cand]
+        ok = (lo + j) < hi
+        for bk, pk in zip(build_keys, probe_keys):
+            ok = ok & (bk[bidx] == pk)
+        ok = ok & build_valid[bidx] & probe_valid
+        pos = jnp.where((pos < 0) & ok, bidx.astype(I32), pos)
+    matched = pos >= 0
+    return pos, matched, bucket_overflow
+
+
+def _exchange(keys: tuple, valid, cols: dict, comm: Comm,
+              dest) -> tuple[tuple, Any, dict]:
+    """Partition exchange. ``dest=None``: broadcast (all_gather, the
+    hybrid-hash build). Otherwise keep only rows hashed to this
+    partition (grace repartition; lowers to all-to-all on real pods —
+    built here from all_gather + own-slot select so one implementation
+    serves vmap-sim and shard_map)."""
+    mine = comm.index()
+
+    def flat(x):
+        g = comm.all_gather(x)
+        return g.reshape((-1,) + g.shape[2:])
+
+    out_keys = tuple(flat(k) for k in keys)
+    v = flat(valid)
+    if dest is not None:
+        v = v & (flat(dest) == mine)
+    out_cols = {}
+    for var, c in cols.items():
+        if c.kind in ("det", "xnode"):
+            out_cols[var] = Col(c.kind, tuple(flat(d) for d in c.data),
+                                c.table)
+        else:
+            out_cols[var] = Col(c.kind, flat(c.data), c.table)
+    return out_keys, v, out_cols
+
+
+# ---------------------------------------------------------------------------
+# Executor
+# ---------------------------------------------------------------------------
+
+class PlanError(ValueError):
+    pass
+
+
+class Executor:
+    """Compiles logical plans against a Database and runs them."""
+
+    def __init__(self, db: xdm.Database, config: ExecConfig = None):
+        self.db = db
+        self.config = config or ExecConfig()
+        self.tables = device_tables(db)
+        parts = {len(c.partitions) for c in db.collections.values()}
+        assert len(parts) == 1, "collections must agree on partitioning"
+        self.num_partitions = parts.pop()
+
+    # -- table plumbing ----------------------------------------------------
+
+    def _table_slice_axes(self):
+        """in_axes tree: partition axis 0 for collections, None for the
+        shared derived arrays."""
+        axes = {}
+        for k, v in self.tables.items():
+            if k == "__derived__":
+                axes[k] = jax.tree.map(lambda _: None, v)
+            else:
+                axes[k] = jax.tree.map(lambda _: 0, v)
+        return axes
+
+    # -- plan compilation ----------------------------------------------------
+
+    def compile(self, plan: A.Op, mode: str = "sim", mesh=None,
+                axis: str = "data", donate: bool = False
+                ) -> "CompiledPlan":
+        """Returns a CompiledPlan whose fn maps tables -> raw arrays
+        (stacked over partitions); static column schema is captured at
+        trace time (strings can't flow through vmap/shard_map)."""
+        cfg = self.config
+        schema: dict[int, tuple] = {}
+
+        def local(tables):
+            ev = ExprEval(self.db, tables)
+            comm = Comm(axis)
+            tile = self._eval(plan, ev, comm, None, cfg)
+            return self._outputs(plan, tile, ev, schema)
+
+        if mode == "sim":
+            fn = jax.vmap(local, in_axes=(self._table_slice_axes(),),
+                          axis_name=axis)
+            return CompiledPlan(jax.jit(fn), schema, plan)
+        if mode == "spmd":
+            from jax.sharding import PartitionSpec as P
+            from jax.experimental.shard_map import shard_map
+
+            in_specs = ({k: (jax.tree.map(lambda _: P(), v)
+                             if k == "__derived__" else
+                             jax.tree.map(lambda _: P(axis), v))
+                         for k, v in self.tables.items()},)
+
+            def local_spmd(tables):
+                # shard_map keeps the (now size-1) partition axis;
+                # squeeze it for the local fn, restore on outputs
+                der = tables["__derived__"]
+                colls = {k: jax.tree.map(lambda a: a[0], v)
+                         for k, v in tables.items() if k != "__derived__"}
+                colls["__derived__"] = der
+                return jax.tree.map(lambda a: a[None], local(colls))
+
+            sm = shard_map(local_spmd, mesh=mesh, in_specs=in_specs,
+                           out_specs=P(axis), check_rep=False)
+            return CompiledPlan(jax.jit(sm), schema, plan)
+        raise ValueError(mode)
+
+    def run(self, plan: A.Op, mode: str = "sim", mesh=None) -> "ResultSet":
+        cp = self.compile(plan, mode=mode, mesh=mesh)
+        raw = jax.device_get(cp.fn(self.tables))
+        return ResultSet(self.db, plan, raw, cp.schema)
+
+    # -- recursive evaluation -------------------------------------------------
+
+    def _trivial_tile(self) -> Tile:
+        return Tile(cols={}, valid=jnp.ones((1,), jnp.bool_),
+                    overflow=jnp.zeros((), jnp.bool_))
+
+    def _eval(self, op: A.Op, ev: ExprEval, comm: Comm,
+              nts_input: Optional[Tile], cfg: ExecConfig) -> Tile:
+        if isinstance(op, A.EmptyTupleSource):
+            return self._trivial_tile()
+        if isinstance(op, A.NestedTupleSource):
+            return nts_input if nts_input is not None \
+                else self._trivial_tile()
+        if isinstance(op, A.DataScan):
+            below = self._eval(op.child, ev, comm, nts_input, cfg)
+            if below.cols:
+                raise PlanError("DATASCAN over non-trivial input "
+                                "(correlated scan not supported)")
+            tab = ev.tables[op.collection]
+            mask = path_match_mask(tab, self.db.names, op.path)
+            cap = cfg.scan_cap or tab["kind"].shape[0]
+            idx, valid, ovf = rows_from_mask(mask, cap)
+            return Tile(cols={op.var: Col("node", idx, op.collection)},
+                        valid=valid, overflow=below.overflow | ovf)
+        if isinstance(op, A.Assign):
+            t = self._eval(op.child, ev, comm, nts_input, cfg)
+            t.cols[op.var] = ev.eval(op.expr, t.cols)
+            return t
+        if isinstance(op, A.Select):
+            t = self._eval(op.child, ev, comm, nts_input, cfg)
+            b = ev.eval(op.expr, t.cols)
+            return Tile(t.cols, t.valid & b.data, t.overflow)
+        if isinstance(op, A.Unnest):
+            return self._eval_unnest(op, ev, comm, nts_input, cfg)
+        if isinstance(op, A.Subplan):
+            outer = self._eval(op.child, ev, comm, nts_input, cfg)
+            if not isinstance(op.plan, A.Aggregate):
+                raise PlanError("SUBPLAN must have been rewritten to an "
+                                "aggregate (run the optimizer first)")
+            return self._eval_aggregate(op.plan, ev, comm, outer, cfg)
+        if isinstance(op, A.Join):
+            return self._eval_join(op, ev, comm, nts_input, cfg)
+        if isinstance(op, A.GroupBy):
+            return self._eval_group_by(op, ev, comm, nts_input, cfg)
+        if isinstance(op, A.DistributeResult):
+            return self._eval(op.child, ev, comm, nts_input, cfg)
+        raise PlanError(f"cannot execute {type(op).__name__}")
+
+    def _eval_group_by(self, op: "A.GroupBy", ev, comm, nts_input,
+                       cfg) -> Tile:
+        """Keyed two-step aggregation (XQuery 3.0 group-by, the
+        paper's §6 future work): grouping keys are dictionary-encoded
+        strings, so the segment space is the string dictionary; the
+        local step is a segmented reduce (the seg_aggregate Pallas
+        kernel's job), the global step psums the [S] partials — rule
+        4.2.2 generalized from scalar to keyed form."""
+        t = self._eval(op.child, ev, comm, nts_input, cfg)
+        key = ev.eval(op.key_expr, t.cols)
+        sid = ev.atom_sid(key)
+        nseg = len(self.db.strings)
+        valid = t.valid & (sid >= 0)
+
+        def seg_sum_count(vals):
+            if cfg.use_pallas_join:      # reuse the kernel toggle
+                from repro.kernels import ops as kops
+                n = vals.shape[0]
+                bn = n
+                for c in (512, 256, 128, 64, 32, 16, 8, 4, 2, 1):
+                    if n % c == 0:
+                        bn = c
+                        break
+                return kops.segmented_sum_count(vals, sid, valid, nseg,
+                                                block_n=bn)
+            from repro.kernels import ref as kref
+            return kref.segmented_sum_count(vals, sid, valid, nseg)
+
+        ones = jnp.ones(sid.shape, F32)
+        _, counts = seg_sum_count(ones)
+        g_counts = comm.psum(counts)
+        cols: dict[int, Col] = {
+            op.key_var: Col("str", jnp.arange(nseg, dtype=I32))}
+        for var, fn, val_e in op.aggs:
+            if fn == "count":
+                cols[var] = Col("num", g_counts)
+                continue
+            v = ev.atom_num(ev.eval(val_e, t.cols))
+            v = jnp.where(valid & ~jnp.isnan(v), v, 0.0)
+            if fn in ("sum", "avg"):
+                sums, _ = seg_sum_count(v)
+                g = comm.psum(sums)
+                if fn == "avg":
+                    g = g / jnp.maximum(g_counts, 1.0)
+                cols[var] = Col("num", g)
+            elif fn in ("min", "max"):
+                safe = jnp.clip(sid, 0, nseg - 1)
+                init = jnp.full((nseg,), jnp.inf if fn == "min"
+                                else -jnp.inf, F32)
+                vv = jnp.where(valid, v, jnp.inf if fn == "min"
+                               else -jnp.inf)
+                local = (init.at[safe].min(vv) if fn == "min"
+                         else init.at[safe].max(vv))
+                g = comm.pmin(local) if fn == "min" \
+                    else comm.pmax(local)
+                cols[var] = Col("num", g)
+            else:
+                raise PlanError(f"group-by aggregate {fn}")
+        central = comm.index() == 0
+        out_valid = (g_counts > 0) & central
+        return Tile(cols, out_valid, t.overflow)
+
+    def _eval_unnest(self, op: A.Unnest, ev, comm, nts_input, cfg) -> Tile:
+        t = self._eval(op.child, ev, comm, nts_input, cfg)
+        e = op.expr
+        if isinstance(e, A.Call) and e.fn == "iterate":
+            # singleton iterate == pass-through alias
+            t.cols[op.var] = ev.eval(e.args[0], t.cols)
+            return t
+        if isinstance(e, A.Call) and e.fn == "child":
+            return self._unnest_child(t, op.var, e, ev, cfg)
+        raise PlanError(f"unnest expr {e}")
+
+    def _unnest_child(self, t: Tile, var: int, e: A.Expr, ev, cfg) -> Tile:
+        """UNNEST child-chain: expand matching descendants, re-gather
+        the other columns from each row's ancestor context tuple."""
+        from repro.core.rewrite.parallel_rules import _child_chain
+        got = _child_chain(e)
+        if got is None:
+            raise PlanError(f"unsupported unnest chain {e}")
+        base_var, names = got
+        base = t.cols[base_var]
+        assert base.kind == "node"
+        tab = ev.tables[base.table]
+        n = tab["kind"].shape[0]
+        tsize = base.data.shape[0]
+        ctx_valid = t.valid & (base.data >= 0)
+        safe = jnp.clip(base.data, 0, n - 1)
+        in_mask = jnp.zeros((n,), jnp.bool_).at[safe].set(ctx_valid)
+        row_of = jnp.full((n,), -1, I32).at[safe].set(
+            jnp.where(ctx_valid, jnp.arange(tsize, dtype=I32), -1))
+        frontier = in_mask
+        name_arr, parent = tab["name"], tab["parent"]
+        for nm in names:
+            f = self.db.names.lookup(nm)
+            up = _gather(frontier, parent, False)
+            frontier = up & (name_arr == (f if f >= 0 else -99))
+        cap = cfg.scan_cap or n
+        idx, valid, ovf = rows_from_mask(frontier, cap)
+        anc = idx
+        for _ in names:
+            anc = _gather(parent, anc, -1)
+        src = _gather(row_of, anc, -1)
+        valid = valid & (src >= 0)
+
+        def regather(c: Col) -> Col:
+            if c.kind in ("det", "xnode"):
+                return Col(c.kind,
+                           tuple(_gather(d, src, -1 if d.dtype != F32
+                                         else jnp.nan)
+                                 for d in c.data), c.table)
+            fill = jnp.nan if c.data.dtype == F32 else -1
+            return Col(c.kind, _gather(c.data, src, fill), c.table)
+
+        cols = {v: regather(c) for v, c in t.cols.items()}
+        cols[var] = Col("node", idx, base.table)
+        return Tile(cols, valid, t.overflow | ovf)
+
+    # -- aggregation -----------------------------------------------------------
+
+    def _eval_aggregate(self, agg: A.Aggregate, ev, comm,
+                        outer: Tile, cfg) -> Tile:
+        inner = self._eval(agg.child, ev, comm, outer, cfg)
+        expr = agg.expr
+        assert isinstance(expr, A.Call)
+        fn = expr.fn
+        arg = expr.args[0]
+        if isinstance(arg, A.Call) and arg.fn == "treat":
+            arg = arg.args[0]
+        if fn == "count":
+            local = jnp.sum(inner.valid.astype(F32))
+            total = comm.psum(local)
+        else:
+            v = ev.atom_num(ev.eval(arg, inner.cols))
+            ok = inner.valid & ~jnp.isnan(v)
+            if fn == "sum":
+                total = comm.psum(jnp.sum(jnp.where(ok, v, 0.0)))
+            elif fn == "min":
+                local = jnp.min(jnp.where(ok, v, jnp.inf))
+                total = comm.pmin(local)
+            elif fn == "max":
+                local = jnp.max(jnp.where(ok, v, -jnp.inf))
+                total = comm.pmax(local)
+            elif fn == "avg":
+                s = comm.psum(jnp.sum(jnp.where(ok, v, 0.0)))
+                c = comm.psum(jnp.sum(ok.astype(F32)))
+                total = s / jnp.maximum(c, 1.0)
+            else:
+                raise PlanError(f"aggregate {fn}")
+        col = Col("num", total[None])
+        # after the global step every partition holds the total; emit
+        # the result tuple only on the "central partition" (§4.2.2)
+        central = (comm.index() == 0)[None]
+        return Tile(cols={agg.var: col}, valid=central,
+                    overflow=inner.overflow | outer.overflow)
+
+    # -- join --------------------------------------------------------------------
+
+    def _eval_join(self, op: A.Join, ev, comm, nts_input, cfg) -> Tile:
+        if not op.hash_keys:
+            raise PlanError("non-equi JOIN not supported (no hash keys)")
+        left = self._eval(op.left, ev, comm, nts_input, cfg)
+        right = self._eval(op.right, ev, comm, nts_input, cfg)
+
+        def key_arr(col: Col) -> jnp.ndarray:
+            # string-dictionary id when present, else packed date,
+            # else float bits — all int32, exact
+            sid = ev.atom_sid(col)
+            date = ev.atom_date(col)
+            num = ev.atom_num(col)
+            bits = lax.bitcast_convert_type(num, I32)
+            return jnp.where(sid >= 0, sid,
+                             jnp.where(date >= 0, jnp.int32(1 << 28) + date,
+                                       bits))
+
+        lkeys = tuple(key_arr(ev.eval(le, left.cols))
+                      for le, _ in op.hash_keys)
+        rkeys = tuple(key_arr(ev.eval(re_, right.cols))
+                      for _, re_ in op.hash_keys)
+
+        # build-side columns flow upward across the exchange: serialize
+        # node refs (Hyracks frame-serialization analogue)
+        mine = comm.index()
+        lcols = {v: ev.to_xnode(c, mine) for v, c in left.cols.items()}
+
+        if cfg.join_strategy == "broadcast":
+            # hybrid-hash analogue: the build side becomes resident on
+            # every partition via all_gather; probe stays local
+            bkeys, bvalid, bcols = _exchange(
+                lkeys, left.valid, lcols, comm, dest=None)
+            pkeys, pvalid, pcols = rkeys, right.valid, dict(right.cols)
+        elif cfg.join_strategy == "repartition":
+            # grace analogue: co-partition BOTH sides by key hash
+            p = comm.size()
+            ldest = (_hash_keys(lkeys).astype(jnp.uint32)
+                     % jnp.uint32(max(p, 1))).astype(I32)
+            rdest = (_hash_keys(rkeys).astype(jnp.uint32)
+                     % jnp.uint32(max(p, 1))).astype(I32)
+            bkeys, bvalid, bcols = _exchange(
+                lkeys, left.valid, lcols, comm, dest=ldest)
+            rcols = {v: ev.to_xnode(c, mine)
+                     for v, c in right.cols.items()}
+            pkeys, pvalid, pcols = _exchange(
+                rkeys, right.valid, rcols, comm, dest=rdest)
+        else:
+            raise ValueError(cfg.join_strategy)
+
+        pos, matched, bovf = hash_join_probe(
+            bkeys, bvalid, pkeys, pvalid, cfg.join_bucket,
+            use_pallas=cfg.use_pallas_join)
+
+        def attach(c: Col) -> Col:
+            if c.kind in ("det", "xnode"):
+                return Col(c.kind,
+                           tuple(_gather(d, pos,
+                                         jnp.nan if d.dtype == F32 else -1)
+                                 for d in c.data), c.table)
+            fill = jnp.nan if c.data.dtype == F32 else -1
+            return Col(c.kind, _gather(c.data, pos, fill), c.table)
+
+        cols = dict(pcols)
+        for v, c in bcols.items():
+            cols[v] = attach(c)
+        valid = pvalid & matched
+        return Tile(cols, valid,
+                    left.overflow | right.overflow | bovf)
+
+    # -- outputs --------------------------------------------------------------
+
+    def _outputs(self, plan: A.Op, tile: Tile, ev: ExprEval,
+                 schema: dict[int, tuple]) -> dict:
+        """Traced arrays only; static (kind, table) goes to ``schema``
+        captured at trace time."""
+        assert isinstance(plan, A.DistributeResult)
+        out: dict[str, Any] = {"valid": tile.valid,
+                               "overflow": tile.overflow}
+        for v in plan.vars:
+            c = tile.cols[v]
+            if c.kind == "node":
+                schema[v] = ("node", c.table)
+                out[f"var{v}"] = c.data
+            elif c.kind == "xnode":
+                schema[v] = ("xnode", c.table)
+                out[f"var{v}"] = c.data       # (part, idx, num, sid, date)
+            elif c.kind in ("atom", "det"):
+                d = ev.detach(c)
+                schema[v] = ("det", None)
+                out[f"var{v}"] = d.data       # (num, sid, date) tuple
+            else:
+                schema[v] = (c.kind, None)
+                out[f"var{v}"] = c.data
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Result extraction (host)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CompiledPlan:
+    fn: Callable
+    schema: dict[int, tuple]
+    plan: A.Op
+
+
+class ResultSet:
+    """Host-side result decoding: rows of python values, plus node
+    fingerprints (concatenated descendant text, document order) so
+    differential tests can compare against the tree-walking baseline."""
+
+    def __init__(self, db: xdm.Database, plan: A.Op, raw: dict,
+                 schema: dict[int, tuple]):
+        self.db = db
+        self.plan = plan
+        self.raw = raw
+        self.schema = schema
+        self.overflow = bool(np.any(raw["overflow"]))
+
+    def rows(self) -> list[tuple]:
+        assert isinstance(self.plan, A.DistributeResult)
+        valid = np.asarray(self.raw["valid"])       # [P, T]
+        npart, t = valid.shape
+        out = []
+        for p in range(npart):
+            for r in range(t):
+                if not valid[p, r]:
+                    continue
+                row = []
+                for v in self.plan.vars:
+                    row.append(self._value(v, p, r))
+                out.append(tuple(row))
+        return out
+
+    def _value(self, v: int, p: int, r: int):
+        kind, table = self.schema[v]
+        data = self.raw[f"var{v}"]
+        if kind == "node":
+            return node_fingerprint(self.db, table, p,
+                                    int(data[p, r]))
+        if kind == "xnode":
+            part, idx = int(data[0][p, r]), int(data[1][p, r])
+            return node_fingerprint(self.db, table, part, idx)
+        if kind == "det":
+            num, sid, date = data
+            s = int(sid[p, r])
+            if s >= 0:
+                return self.db.strings.str(s)
+            return float(num[p, r])
+        if kind == "num":
+            return float(data[p, r])
+        if kind == "str":
+            s = int(data[p, r])
+            return self.db.strings.str(s) if s >= 0 else None
+        if kind == "date":
+            return int(data[p, r])
+        if kind == "bool":
+            return bool(data[p, r])
+        raise TypeError(kind)
+
+    def scalar(self) -> float:
+        rows = self.rows()
+        assert len(rows) == 1 and len(rows[0]) == 1, rows
+        return rows[0][0]
+
+
+def node_fingerprint(db: xdm.Database, collection: str, part: int,
+                     idx: int) -> str:
+    """Serialize a node as its descendant text values in doc order."""
+    t = db.collection(collection).partitions[part]
+    if idx < 0 or idx >= t.num_nodes:
+        return "<invalid>"
+    out = []
+    stop = t.num_nodes
+    # children are contiguous after the parent in our shred layouts;
+    # generic walk: collect all descendants via parent chains
+    desc = [idx]
+    parents = {idx}
+    for j in range(idx + 1, stop):
+        par = int(t.parent[j])
+        if par in parents:
+            parents.add(j)
+            desc.append(j)
+        elif par < idx:
+            break
+    for j in desc:
+        sid = int(t.text_sid[j])
+        if sid >= 0:
+            out.append(db.strings.str(sid))
+        elif not np.isnan(t.text_num[j]):
+            v = float(t.text_num[j])
+            out.append(str(int(v)) if v.is_integer() else f"{v:.1f}")
+    return "|".join(out)

@@ -1,0 +1,3 @@
+from repro.core.rewrite.engine import (Context, apply_rule_once, optimize,
+                                       run_rules)  # noqa: F401
+from repro.core.rewrite import path_rules, parallel_rules  # noqa: F401

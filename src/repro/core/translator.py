@@ -1,0 +1,293 @@
+"""AST -> normalized Algebricks logical plan (paper §3.3 / §4 intro).
+
+Normalization deliberately over-protects correctness, exactly as the
+paper describes, so the rewrite rules have something real to remove:
+
+* every child path step becomes
+    ASSIGN( $sorted : sort-distinct-nodes-asc-or-atomics($agg) )
+    SUBPLAN { AGGREGATE( $agg : create_sequence(
+                  child(treat($it, element_node), "name")) )
+              UNNEST( $it : iterate($in) )
+              NESTED-TUPLE-SOURCE }
+* ``doc``/``collection`` become ASSIGN(doc(promote(data(lit), string)))
+* FLWOR ``for`` -> UNNEST(iterate), ``let`` -> ASSIGN,
+  ``where`` -> SELECT(boolean(...))
+* scalar aggregates over a FLWOR become the §4.2.2 shape:
+    ASSIGN( $v : count(treat($seq, any_type)) )
+    SUBPLAN { AGGREGATE( $seq : create_sequence($ret) ) <flwor ops> NTS }
+* the query result is unnested (UNNEST iterate) into DISTRIBUTE-RESULT.
+
+Deviations (documented, DESIGN.md §4): quantified expressions stay
+composite ``Some`` scalars; multi-item ``return (a, b, c)`` keeps tuple
+shape in DISTRIBUTE-RESULT instead of flattening.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import xqparser as xq
+from repro.core.algebra import (Aggregate, Assign, Call, Const,
+                                DistributeResult, EmptyTupleSource, Expr,
+                                GroupBy, NestedTupleSource, Op, Select,
+                                Some, Subplan, Unnest, Var)
+
+_CMP = {"eq": "value-eq", "ne": "value-ne", "lt": "value-lt",
+        "le": "value-le", "gt": "value-gt", "ge": "value-ge"}
+_ARITH = {"add": "add", "sub": "subtract", "mul": "multiply",
+          "div": "divide"}
+_AGG_FNS = ("count", "sum", "min", "max", "avg")
+
+
+@dataclasses.dataclass
+class _Env:
+    vars: dict[str, int]
+    node_valued: dict[int, bool]
+
+
+class Translator:
+    def __init__(self) -> None:
+        self._next = 0
+
+    def new_var(self) -> int:
+        self._next += 1
+        return self._next
+
+    # -- expression helpers ---------------------------------------------
+
+    def _atomize(self, e: Expr, is_node: bool) -> Expr:
+        return Call("data", (e,)) if is_node else e
+
+    def _is_node_ast(self, ast: xq.Ast, env: _Env) -> bool:
+        if isinstance(ast, xq.Path):
+            return True
+        if isinstance(ast, xq.Ref):
+            return env.node_valued.get(env.vars[ast.name], True)
+        if isinstance(ast, xq.Fn):
+            return ast.name in ("doc", "collection")
+        return False
+
+    # -- pure translation (no plan ops): quantifier bodies ---------------
+
+    def pure_expr(self, ast: xq.Ast, env: _Env) -> Expr:
+        if isinstance(ast, xq.Lit):
+            return Const(ast.value, ast.typ)
+        if isinstance(ast, xq.Ref):
+            return Var(env.vars[ast.name])
+        if isinstance(ast, xq.Path):
+            e = self.pure_expr(ast.base, env)
+            for step in ast.steps:
+                e = Call("child", (Call("treat",
+                                        (e, Const("element_node", "type"))),
+                                   Const(step, "string")))
+            return e
+        if isinstance(ast, xq.Bin):
+            if ast.op in ("and", "or"):
+                return Call(ast.op, (self.pure_expr(ast.left, env),
+                                     self.pure_expr(ast.right, env)))
+            fn = _CMP.get(ast.op) or _ARITH[ast.op]
+            le = self._atomize(self.pure_expr(ast.left, env),
+                               self._is_node_ast(ast.left, env))
+            re_ = self._atomize(self.pure_expr(ast.right, env),
+                                self._is_node_ast(ast.right, env))
+            return Call(fn, (le, re_))
+        if isinstance(ast, xq.Fn):
+            args = tuple(self.pure_expr(a, env) for a in ast.args)
+            return Call(ast.name, args)
+        raise NotImplementedError(f"pure context: {ast}")
+
+    # -- plan-building translation ---------------------------------------
+
+    def path_step(self, plan: Op, invar: int, step: str
+                  ) -> tuple[Op, int]:
+        """The paper's 3-stage path step (iterate/collect/sort)."""
+        it, agg, srt = self.new_var(), self.new_var(), self.new_var()
+        nested: Op = NestedTupleSource()
+        nested = Unnest(it, Call("iterate", (Var(invar),)), nested)
+        step_expr = Call("child",
+                         (Call("treat", (Var(it),
+                                         Const("element_node", "type"))),
+                          Const(step, "string")))
+        nested = Aggregate(agg, Call("create_sequence", (step_expr,)),
+                           nested)
+        plan = Subplan(nested, plan)
+        plan = Assign(srt,
+                      Call("sort-distinct-nodes-asc-or-atomics",
+                           (Var(agg),)), plan)
+        return plan, srt
+
+    def expr(self, ast: xq.Ast, env: _Env, plan: Op
+             ) -> tuple[Op, Expr, bool]:
+        """Returns (plan, expr, is_node_valued)."""
+        if isinstance(ast, xq.Lit):
+            return plan, Const(ast.value, ast.typ), False
+        if isinstance(ast, xq.Ref):
+            v = env.vars[ast.name]
+            return plan, Var(v), env.node_valued.get(v, True)
+        if isinstance(ast, xq.Path):
+            plan, base, _ = self.expr(ast.base, env, plan)
+            if not isinstance(base, Var):
+                bv = self.new_var()
+                plan = Assign(bv, base, plan)
+                base = Var(bv)
+            v = base.n
+            for step in ast.steps:
+                plan, v = self.path_step(plan, v, step)
+            return plan, Var(v), True
+        if isinstance(ast, xq.Fn):
+            if ast.name in ("doc", "collection"):
+                lit = ast.args[0]
+                assert isinstance(lit, xq.Lit), "doc/collection need literal"
+                inner = Call("promote", (Call("data",
+                                              (Const(lit.value, "string"),)),
+                                         Const("string", "type")))
+                v = self.new_var()
+                plan = Assign(v, Call(ast.name, (inner,)), plan)
+                return plan, Var(v), True
+            if ast.name in _AGG_FNS:
+                return self.aggregate_call(ast, env, plan)
+            args = []
+            for a in ast.args:
+                plan, e, _ = self.expr(a, env, plan)
+                args.append(e)
+            return plan, Call(ast.name, tuple(args)), False
+        if isinstance(ast, xq.Bin):
+            if ast.op in ("and", "or"):
+                plan, le, _ = self.expr(ast.left, env, plan)
+                plan, re_, _ = self.expr(ast.right, env, plan)
+                return plan, Call(ast.op, (le, re_)), False
+            fn = _CMP.get(ast.op) or _ARITH[ast.op]
+            plan, le, ln = self.expr(ast.left, env, plan)
+            plan, re_, rn = self.expr(ast.right, env, plan)
+            return plan, Call(fn, (self._atomize(le, ln),
+                                   self._atomize(re_, rn))), False
+        if isinstance(ast, xq.SomeQ):
+            plan, src, _ = self.expr(ast.source, env, plan)
+            qv = self.new_var()
+            inner_env = _Env({**env.vars, ast.var: qv},
+                             {**env.node_valued, qv: True})
+            cond = self.pure_expr(ast.cond, inner_env)
+            return plan, Some(qv, src, cond), False
+        if isinstance(ast, xq.Flwor):
+            # FLWOR in expression position: collect its stream into a
+            # sequence (create_sequence SUBPLAN), §4.2.2 shape.
+            nested, ret_vars = self.flwor_stream(ast, env,
+                                                 NestedTupleSource())
+            assert len(ret_vars) == 1, "expression FLWOR returns one item"
+            seq = self.new_var()
+            nested = Aggregate(seq, Call("create_sequence",
+                                         (Var(ret_vars[0]),)), nested)
+            plan = Subplan(nested, plan)
+            return plan, Var(seq), True
+        raise NotImplementedError(str(ast))
+
+    def aggregate_call(self, ast: xq.Fn, env: _Env, plan: Op
+                       ) -> tuple[Op, Expr, bool]:
+        """count/sum/... over FLWOR or path: ASSIGN(scalar agg) over
+        SUBPLAN{AGGREGATE(create_sequence)}, per §4.2.2."""
+        (arg,) = ast.args
+        plan, seq_expr, _ = self.expr(arg, env, plan)
+        call = Call(ast.name, (Call("treat", (seq_expr,
+                                              Const("any_type", "type"))),))
+        return plan, call, False
+
+    def flwor_stream(self, ast: xq.Flwor, env: _Env, plan: Op
+                     ) -> tuple[Op, list[int]]:
+        """Translate FLWOR clauses onto ``plan`` as a tuple stream;
+        returns (plan, return-item vars)."""
+        env = _Env(dict(env.vars), dict(env.node_valued))
+        for cl in ast.clauses:
+            if cl[0] == "for":
+                _, name, src = cl
+                plan, e, is_node = self.expr(src, env, plan)
+                if not isinstance(e, Var):
+                    sv = self.new_var()
+                    plan = Assign(sv, e, plan)
+                    e = Var(sv)
+                x = self.new_var()
+                plan = Unnest(x, Call("iterate", (e,)), plan)
+                env.vars[name] = x
+                env.node_valued[x] = is_node
+            elif cl[0] == "let":
+                _, name, src = cl
+                plan, e, is_node = self.expr(src, env, plan)
+                x = self.new_var()
+                plan = Assign(x, e, plan)
+                env.vars[name] = x
+                env.node_valued[x] = is_node
+            elif cl[0] == "where":
+                plan, e, _ = self.expr(cl[1], env, plan)
+                plan = Select(Call("boolean", (e,)), plan)
+            elif cl[0] == "groupby":
+                return self._group_by(cl, ast, env, plan)
+            else:
+                raise ValueError(cl)
+        # return clause
+        items = (ast.ret.items if isinstance(ast.ret, xq.Seq)
+                 else (ast.ret,))
+        ret_vars: list[int] = []
+        for item in items:
+            plan, e, _ = self.expr(item, env, plan)
+            if isinstance(e, Var):
+                ret_vars.append(e.n)
+            else:
+                rv = self.new_var()
+                plan = Assign(rv, e, plan)
+                ret_vars.append(rv)
+        return plan, ret_vars
+
+    def _group_by(self, cl, ast: xq.Flwor, env: _Env, plan: Op
+                  ) -> tuple[Op, list[int]]:
+        """XQuery 3.0-lite group-by (paper §6 future work): must be
+        the last clause; return items are the grouping key and
+        aggregate functions over per-tuple expressions. Lowered to the
+        keyed two-step GROUP-BY operator (segmented reduce locally,
+        psum globally — rule 4.2.2 generalized)."""
+        _, gname, key_ast = cl
+        plan, key_e, _ = self.expr(key_ast, env, plan)
+        key_var = self.new_var()
+        items = (ast.ret.items if isinstance(ast.ret, xq.Seq)
+                 else (ast.ret,))
+        aggs: list[tuple[int, str, Expr]] = []
+        ret_vars: list[int] = []
+        _AGGS = ("count", "sum", "min", "max", "avg")
+        for item in items:
+            if isinstance(item, xq.Ref) and item.name == gname:
+                ret_vars.append(key_var)
+                continue
+            if isinstance(item, xq.Fn) and item.name in _AGGS:
+                plan, val_e, _ = self.expr(item.args[0], env, plan)
+                v = self.new_var()
+                aggs.append((v, item.name, val_e))
+                ret_vars.append(v)
+                continue
+            raise NotImplementedError(
+                "group-by return items must be the grouping key or "
+                f"aggregates, got {item}")
+        plan = GroupBy(key_var, key_e, tuple(aggs), plan)
+        return plan, ret_vars
+
+    # -- entry point -------------------------------------------------------
+
+    def translate(self, ast: xq.Ast) -> Op:
+        env = _Env({}, {})
+        plan: Op = EmptyTupleSource()
+        if isinstance(ast, xq.Flwor):
+            plan, ret_vars = self.flwor_stream(ast, env, plan)
+            if len(ret_vars) == 1:
+                out = self.new_var()
+                plan = Unnest(out, Call("iterate", (Var(ret_vars[0]),)),
+                              plan)
+                return DistributeResult((out,), plan)
+            return DistributeResult(tuple(ret_vars), plan)
+        plan, e, _ = self.expr(ast, env, plan)
+        if not isinstance(e, Var):
+            v = self.new_var()
+            plan = Assign(v, e, plan)
+            e = Var(v)
+        out = self.new_var()
+        plan = Unnest(out, Call("iterate", (e,)), plan)
+        return DistributeResult((out,), plan)
+
+
+def translate(query: str) -> Op:
+    return Translator().translate(xq.parse(query))

@@ -1,0 +1,1 @@
+from repro.data.weather import WeatherSpec, build_database  # noqa: F401

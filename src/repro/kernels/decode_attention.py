@@ -1,0 +1,103 @@
+"""Split-K flash-decode kernel (Pallas TPU) for long-context serving.
+
+One new token attends to a large KV cache. Layout folds the GQA group
+into the query-row dimension: q (B*Hkv, G, D) — G query heads share one
+kv head, giving the MXU G sublanes of work per step instead of 1. Grid
+(B*Hkv, Sk/bk): the k dimension is sequential with (acc, m, l) scratch;
+``kv_len`` masks unwritten cache slots, ``window`` implements local
+attention during decode.
+
+The KV-sequence axis is the one sharded over the mesh for the
+``long_500k`` cells (DESIGN.md §6): each shard runs this kernel over
+its KV slice and the partial (acc, m, l) combine is a 3-tensor psum —
+the same local/global split as rewrite rule 4.2.2, applied to softmax.
+
+VMEM per step (f32): k/v (bk, d)·2 + q (G, d) + acc (G, d) + s (G, bk)
+≈ 260 KB at bk=512, d=128, G=8.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38
+
+
+def _kernel(kvlen_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+            *, scale: float, window: int | None, bk: int, nk: int,
+            softcap: float | None):
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale       # (G, d)
+    k = k_ref[0].astype(jnp.float32)               # (bk, d)
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (G, bk)
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    kv_len = kvlen_ref[0]
+    g = q.shape[0]
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (g, bk), 1)
+    ok = k_pos < kv_len
+    if window is not None:
+        ok &= k_pos > (kv_len - 1 - window)
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    acc_ref[...] = (acc_ref[...] * corr[:, None]
+                    + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ()))))
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+    m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _emit():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def decode_attention_bhgd(q: jax.Array, k: jax.Array, v: jax.Array,
+                          kv_len: jax.Array, *,
+                          window: int | None = None,
+                          softcap: float | None = None,
+                          scale: float | None = None,
+                          block_k: int = 512,
+                          interpret: bool = False) -> jax.Array:
+    """q: (B*Hkv, G, D); k, v: (B*Hkv, Sk, D); kv_len: (B*Hkv,) int32."""
+    bh, g, d = q.shape
+    _, sk, _ = k.shape
+    bk = min(block_k, sk)
+    assert sk % bk == 0, (sk, bk)
+    nk = sk // bk
+    scale = scale if scale is not None else d ** -0.5
+    kernel = functools.partial(_kernel, scale=scale, window=window,
+                               softcap=softcap, bk=bk, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, nk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda h, j: (h,)),
+            pl.BlockSpec((1, g, d), lambda h, j: (h, 0, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, j: (h, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, j: (h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, d), lambda h, j: (h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, d), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(kv_len.astype(jnp.int32), q, k, v)

@@ -1,0 +1,110 @@
+"""Flash attention forward kernel (Pallas TPU).
+
+Blockwise online-softmax: grid (B*Hq, Sq/bq, Sk/bk); the innermost k
+dimension is sequential, carrying (acc, m, l) in VMEM scratch and
+emitting the normalized output at the last k step. GQA is folded into
+the BlockSpec index maps (query head h reads kv head h // g) so no
+KV duplication ever materializes.
+
+VMEM budget per step (f32): q (bq, d) + k/v (bk, d)·2 + scores (bq, bk)
++ acc (bq, d) + m/l (bq) ≈ with bq=bk=128, d=128: ~33 KB × 4 B ≈ 330 KB
+— comfortably inside the ~16 MB VMEM of a TPU core, leaving room for
+double buffering. MXU alignment: bq, bk, d all multiples of 128 at the
+production shapes (head_dim 128; 64/80-dim heads pad to 128).
+
+Supports: causal masking, sliding window (local attention), logit
+softcapping (gemma2) — the variants the assigned architectures need.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, causal: bool, window: int | None,
+            softcap: float | None, bq: int, bk: int, nk: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale      # (bq, d)
+    k = k_ref[0].astype(jnp.float32)              # (bk, d)
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bk)
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+
+    qi = pl.program_id(1)
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    ok = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        ok &= k_pos <= q_pos
+    if window is not None:
+        ok &= k_pos > (q_pos - window)
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    acc_ref[...] = (acc_ref[...] * corr[:, None]
+                    + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ()))))
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+    m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _emit():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                         g: int, causal: bool = True,
+                         window: int | None = None,
+                         softcap: float | None = None,
+                         scale: float | None = None,
+                         block_q: int = 128, block_k: int = 128,
+                         interpret: bool = False) -> jax.Array:
+    """q: (B*Hq, Sq, D); k, v: (B*Hkv, Sk, D); g = Hq // Hkv."""
+    bhq, sq, d = q.shape
+    bhkv, sk, _ = k.shape
+    assert bhq == bhkv * g, (bhq, bhkv, g)
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    assert sq % bq == 0 and sk % bk == 0, (sq, bq, sk, bk)
+    nq, nk = sq // bq, sk // bk
+    scale = scale if scale is not None else d ** -0.5
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, bq=bq, bk=bk, nk=nk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(bhq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, i, j: (h // g, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, i, j: (h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bhq, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),   # acc
+            pltpu.VMEM((bq,), jnp.float32),     # running max m
+            pltpu.VMEM((bq,), jnp.float32),     # running denom l
+        ],
+        interpret=interpret,
+    )(q, k, v)

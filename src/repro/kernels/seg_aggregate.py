@@ -1,0 +1,70 @@
+"""Segmented aggregation kernel (Pallas TPU) — rule 4.2.2's local step.
+
+Two-step aggregation reduces each partition locally before the global
+exchange. When the aggregate is keyed (per-station, per-day — Q6-style
+workloads and the LM data pipeline's per-bucket stats), the local step
+is a segmented reduction. TPU-native trick: scatter-add has no good
+MXU form, but ``one_hot(seg) @ values`` is a (bn, S) × (bn,) matmul —
+so the kernel builds the one-hot tile on the fly and accumulates the
+segment sums/counts in a VMEM-resident (S,) output across grid steps.
+
+VMEM per step: one-hot (bn, S) f32 ≈ 2 MB at bn=512, S=1024; choose
+bn·S ≤ ~4M to stay inside budget.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(vals_ref, seg_ref, valid_ref, sum_ref, cnt_ref, *,
+            num_segments: int, bn: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        sum_ref[...] = jnp.zeros_like(sum_ref)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    v = vals_ref[...].astype(jnp.float32)
+    seg = seg_ref[...]
+    ok = valid_ref[...] & (seg >= 0) & (seg < num_segments)
+    v = jnp.where(ok, v, 0.0)
+    seg_ids = jax.lax.broadcasted_iota(jnp.int32, (bn, num_segments), 1)
+    onehot = (seg_ids == seg[:, None]) & ok[:, None]   # (bn, S)
+    oh = onehot.astype(jnp.float32)
+    # (S,) += (S, bn) @ (bn,)
+    sum_ref[...] += jax.lax.dot_general(oh, v, (((0,), (0,)), ((), ())))
+    cnt_ref[...] += jnp.sum(oh, axis=0)
+
+
+def segmented_sum_count(values: jax.Array, segments: jax.Array,
+                        valid: jax.Array, num_segments: int, *,
+                        block_n: int = 512, interpret: bool = False
+                        ) -> tuple[jax.Array, jax.Array]:
+    """values/segments/valid: [N]; returns (sums [S], counts [S])."""
+    n = values.shape[0]
+    bn = min(block_n, n)
+    assert n % bn == 0, (n, bn)
+    kernel = functools.partial(_kernel, num_segments=num_segments, bn=bn)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((num_segments,), lambda i: (0,)),
+            pl.BlockSpec((num_segments,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((num_segments,), jnp.float32),
+            jax.ShapeDtypeStruct((num_segments,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(values, segments.astype(jnp.int32), valid)

@@ -1,0 +1,247 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST execute before any jax import — jax locks the
+device count at first init. 512 host devices back both the single-pod
+(16 x 16 = 256 chips) and multi-pod (2 x 16 x 16 = 512 chips) meshes.
+
+Per cell this driver:
+  1. builds the jitted step (train_step for train_4k, prefill/serve
+     steps for the inference cells) with the production shardings
+     (launch/mesh.py),
+  2. ``.lower(**input_specs).compile()`` — success proves the sharding
+     config is coherent (no shape mismatch, no unsupported collective,
+     fits at compile),
+  3. records ``memory_analysis()`` (bytes/device), ``cost_analysis()``
+     (raw, body-once), the trip-adjusted HLO dot-FLOPs / HBM-bytes /
+     collective-bytes (launch/hloparse.py), analytic MODEL_FLOPS
+     (models/flops.py), and the three roofline terms (§Roofline)
+     into a JSON under --outdir.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (per the assignment).
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (ARCHS, SHAPES, get_config, input_specs,
+                           supported)
+from repro.launch import mesh as mesh_lib
+from repro.launch.hloparse import analyze
+from repro.models import model as model_lib
+from repro.models import steps as steps_lib
+from repro.models.flops import model_flops
+from repro.optim import adamw_init
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / link (ICI)
+
+
+def build_step_and_args(cfg, shape_name: str, mesh):
+    """Returns (fn, abstract_args, in_shardings, out_shardings)."""
+    sh = SHAPES[shape_name]
+    kind = sh["kind"]
+    spec = input_specs(cfg, shape_name)
+    aparams = model_lib.abstract_params(cfg)
+    named = partial(mesh_lib.named, mesh)
+    pspecs = named(mesh_lib.param_specs(cfg, mesh, aparams))
+
+    if kind == "train":
+        aopt = jax.eval_shape(adamw_init, aparams)
+        ospecs = named(mesh_lib.opt_specs(cfg, mesh, aopt))
+        bspecs = named(mesh_lib.batch_specs(cfg, mesh, spec["batch"]))
+        step = steps_lib.make_train_step(
+            cfg, num_microbatches=cfg.train_microbatches)
+        args = (aparams, aopt, spec["batch"])
+        in_sh = (pspecs, ospecs, bspecs)
+        # keep params/opt sharded on output (otherwise XLA would insert
+        # a giant all-gather that poisons the collective stats)
+        out_sh = (pspecs, ospecs, None)
+    elif kind == "prefill":
+        bspecs = named(mesh_lib.batch_specs(cfg, mesh, spec["batch"]))
+        step = steps_lib.make_prefill_step(cfg)
+        args = (aparams, spec["batch"])
+        in_sh = (pspecs, bspecs)
+        out_sh = None
+    elif kind == "decode":
+        cspecs = named(mesh_lib.cache_specs(cfg, mesh, spec["caches"]))
+        b = spec["tokens"].shape[0]
+        tok_spec = named(
+            mesh_lib.P(mesh_lib._sh(mesh, b, mesh_lib.BATCH), None))
+        kvl_spec = named(mesh_lib.P(mesh_lib._sh(mesh, b, mesh_lib.BATCH)))
+        step = steps_lib.make_decode_step(cfg)
+        args = (aparams, spec["caches"], spec["tokens"], spec["kv_len"])
+        in_sh = (pspecs, cspecs, tok_spec, kvl_spec)
+        out_sh = (None, cspecs)  # logits inferred; caches stay put
+    else:
+        raise ValueError(kind)
+    return step, args, in_sh, out_sh
+
+
+def _parse_override(kv: str):
+    k, v = kv.split("=", 1)
+    if v in ("True", "False"):
+        return k, v == "True"
+    try:
+        return k, int(v)
+    except ValueError:
+        pass
+    try:
+        return k, float(v)
+    except ValueError:
+        pass
+    if "," in v or k.startswith("act_shard"):
+        return k, tuple(x for x in v.split(",") if x)
+    return k, v
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             outdir: str | None = None, hlo_out: str | None = None,
+             overrides: dict | None = None, tag: str = "") -> dict:
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    t0 = time.time()
+    step, args, in_sh, out_sh = build_step_and_args(cfg, shape_name, mesh)
+    jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh)
+    with mesh:
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0] if ca else {}
+    hlo = compiled.as_text()
+    if hlo_out:
+        with open(hlo_out, "w") as f:
+            f.write(hlo)
+    st = analyze(hlo)
+
+    sh = SHAPES[shape_name]
+    mf = model_flops(cfg, sh["kind"], sh["batch"], sh["seq"])
+    # per-device terms (HLO is the per-device SPMD program)
+    compute_s = st.dot_flops / PEAK_FLOPS
+    memory_s = st.hbm_bytes / HBM_BW
+    collective_s = st.total_collective_bytes / LINK_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    total_dot_flops = st.dot_flops * chips
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": int(chips),
+        "ok": True,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes_per_device": mem.argument_size_in_bytes,
+            "output_bytes_per_device": mem.output_size_in_bytes,
+            "temp_bytes_per_device": mem.temp_size_in_bytes,
+            "alias_bytes_per_device": mem.alias_size_in_bytes,
+        },
+        "cost_raw": {"flops_body_once": ca.get("flops"),
+                     "bytes_body_once": ca.get("bytes accessed")},
+        "hlo": {
+            "dot_flops_per_device": st.dot_flops,
+            "hbm_bytes_per_device": st.hbm_bytes,
+            "collective_bytes_per_device": st.collective_bytes,
+            "collective_count": st.collective_count,
+            "scan_trips": st.trips,
+        },
+        "model_flops": mf,
+        "roofline": {
+            **{k: float(v) for k, v in terms.items()},
+            "dominant": dominant,
+            "bound_s": float(max(terms.values())),
+            "useful_ratio": (mf["total"] / total_dot_flops
+                             if total_dot_flops else None),
+            "roofline_fraction": (compute_s / max(terms.values())
+                                  if max(terms.values()) else None),
+        },
+    }
+    if overrides:
+        result["overrides"] = {k: list(v) if isinstance(v, tuple) else v
+                               for k, v in overrides.items()}
+    if outdir:
+        os.makedirs(outdir, exist_ok=True)
+        suffix = f".{tag}" if tag else ""
+        fname = f"{arch}_{shape_name}_{result['mesh']}{suffix}.json"
+        with open(os.path.join(outdir, fname), "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["pod", "multipod", "both"],
+                    default="pod")
+    ap.add_argument("--outdir", default="experiments/dryrun")
+    ap.add_argument("--hlo-out", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--set", dest="overrides", action="append",
+                    default=[], metavar="KEY=VALUE",
+                    help="ModelConfig overrides (perf iterations)")
+    ap.add_argument("--tag", default="",
+                    help="suffix for the result JSON (perf iterations)")
+    args = ap.parse_args()
+    overrides = dict(_parse_override(kv) for kv in args.overrides)
+
+    cells = []
+    archs = [args.arch] if args.arch else list(ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"pod": [False], "multipod": [True],
+              "both": [False, True]}[args.mesh]
+    for a in archs:
+        for s in shapes:
+            if not supported(a, s):
+                continue
+            for mp in meshes:
+                cells.append((a, s, mp))
+
+    failures = 0
+    for a, s, mp in cells:
+        tag = f"{a} x {s} x {'2x16x16' if mp else '16x16'}"
+        try:
+            r = run_cell(a, s, mp, outdir=args.outdir,
+                         hlo_out=args.hlo_out, overrides=overrides,
+                         tag=args.tag)
+            rl = r["roofline"]
+            print(f"OK   {tag}: compile={r['compile_s']}s "
+                  f"dominant={rl['dominant']} "
+                  f"bound={rl['bound_s']:.4f}s "
+                  f"frac={rl['roofline_fraction']:.3f} "
+                  f"temp/dev={r['memory']['temp_bytes_per_device']/2**30:.2f}GiB",
+                  flush=True)
+        except Exception as e:
+            failures += 1
+            print(f"FAIL {tag}: {type(e).__name__}: {e}", flush=True)
+            traceback.print_exc()
+            if args.outdir:
+                os.makedirs(args.outdir, exist_ok=True)
+                fname = (f"{a}_{s}_{'2x16x16' if mp else '16x16'}"
+                         ".fail.json")
+                with open(os.path.join(args.outdir, fname), "w") as f:
+                    json.dump({"arch": a, "shape": s, "ok": False,
+                               "error": f"{type(e).__name__}: {e}"}, f)
+    print(f"done: {len(cells) - failures}/{len(cells)} cells OK")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,255 @@
+"""Post-SPMD HLO analysis: collective bytes + dot FLOPs with while-loop
+trip counts.
+
+``compiled.cost_analysis()`` gives FLOPs/bytes but visits a while body
+ONCE (verified empirically: an 8-iteration scan reports 1/8 the flops
+of its unrolled twin). Scans over layers/microbatches lower to
+while(counter < constant), so this module parses the optimized HLO
+text to
+
+  * split computations and build a per-computation trip-count
+    multiplier (product of enclosing while loops, loop bound read from
+    the condition computation's integer constants),
+  * sum collective op bytes (all-gather / all-reduce / reduce-scatter
+    / all-to-all / collective-permute), trip-adjusted,
+  * sum dot FLOPs (2 x prod(result dims) x prod(contracting dims)),
+    trip-adjusted — the honest "HLO_FLOPs" for the roofline,
+  * sum op result bytes as a trip-adjusted lower bound on bytes moved.
+
+Shapes come from a per-computation symbol table of op definitions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([\d,]*)\]")
+_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\(")
+_DEF_RE = re.compile(r"^\s*%([\w.\-]+)\s*=\s*(.*)$")
+_OP_RE = re.compile(r"(?:^|\}\s|\]\s|\)\s|\s)([a-z][a-z0-9\-]*)\(")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter",
+                "all-to-all", "collective-permute")
+
+
+def _shapes_in(text: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _shapes_in(text):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _op_kind(rhs: str) -> Optional[str]:
+    """Op name from the right-hand side of '%x = <type> op(...)'."""
+    # strip the leading type (array or tuple) then find 'opname('
+    m = _OP_RE.search(rhs)
+    return m.group(1) if m else None
+
+
+@dataclasses.dataclass
+class HloStats:
+    collective_bytes: dict[str, int]       # kind -> bytes (trip-adjusted)
+    collective_count: dict[str, int]
+    dot_flops: int                          # trip-adjusted
+    result_bytes: int                       # trip-adjusted op outputs
+    hbm_bytes: int                          # trip-adjusted HBM traffic est.
+    trips: dict[str, int]                   # body computation -> trip
+
+    @property
+    def total_collective_bytes(self) -> int:
+        return sum(self.collective_bytes.values())
+
+
+def _split_computations(hlo: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        if line.rstrip().endswith("{"):
+            m = _HEADER_RE.match(line.strip())
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                continue
+        s = line.strip()
+        if s.startswith("}"):
+            cur = None
+            continue
+        if cur is not None and s:
+            comps[cur].append(s)
+    return comps
+
+
+def _trip_count(cond_lines: list[str]) -> int:
+    best = 1
+    for ln in cond_lines:
+        for m in re.finditer(r"constant\((\d+)\)", ln):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def analyze(hlo: str) -> HloStats:
+    comps = _split_computations(hlo)
+
+    # while bodies -> trip counts (condition holds the loop bound; the
+    # compare may be behind a fusion called from the condition)
+    body_trip: dict[str, int] = {}
+    call_re = re.compile(
+        r"(?:to_apply|body|condition|calls)=%?([\w.\-]+)")
+    callees: dict[str, set[str]] = {c: set() for c in comps}
+    for c, lines in comps.items():
+        for ln in lines:
+            for m in call_re.finditer(ln):
+                if m.group(1) in comps:
+                    callees[c].add(m.group(1))
+    for c, lines in comps.items():
+        for ln in lines:
+            mb = re.search(r"body=%?([\w.\-]+)", ln)
+            mc = re.search(r"condition=%?([\w.\-]+)", ln)
+            if mb and mc and mc.group(1) in comps:
+                cond_lines = list(comps[mc.group(1)])
+                for callee in callees.get(mc.group(1), ()):
+                    cond_lines += comps.get(callee, [])
+                body_trip[mb.group(1)] = _trip_count(cond_lines)
+
+    # multiplier per computation: product of enclosing while trips
+    mult: dict[str, int] = {}
+
+    def visit(comp: str, acc: int, seen: frozenset):
+        if comp in seen:
+            return
+        if acc <= mult.get(comp, 0):
+            return
+        mult[comp] = acc
+        for callee in callees.get(comp, ()):
+            visit(callee, acc * body_trip.get(callee, 1),
+                  seen | {comp})
+
+    called = set()
+    for cs in callees.values():
+        called |= cs
+    roots = [c for c in comps if c not in called] or list(comps)
+    for r in roots:
+        visit(r, 1, frozenset())
+
+    coll_bytes: dict[str, int] = {}
+    coll_count: dict[str, int] = {}
+    dot_flops = 0
+    result_bytes = 0
+    hbm_bytes = 0
+    # computations whose ops touch HBM: entry + while bodies/conditions;
+    # fusion-internal computations (reached via calls=/to_apply=) run in
+    # registers/VMEM and must not count toward HBM traffic
+    fusion_called: set[str] = set()
+    for c, lines in comps.items():
+        for ln in lines:
+            for m in re.finditer(r"(?:calls|to_apply)=%?([\w.\-]+)", ln):
+                fusion_called.add(m.group(1))
+    _FREE_OPS = {"parameter", "tuple", "get-tuple-element", "bitcast",
+                 "constant", "after-all", "partition-id", "replica-id"}
+
+    for c, lines in comps.items():
+        m_ = mult.get(c, 1)
+        hbm_level = c not in fusion_called
+        sym: dict[str, str] = {}
+        for ln in lines:
+            d = _DEF_RE.match(ln)
+            if not d:
+                continue
+            name, rhs = d.group(1), d.group(2)
+            sym[name] = rhs
+            kind = _op_kind(rhs)
+            if kind is None:
+                continue
+            head = rhs.split(" metadata=")[0]
+            res_b = 0
+            shapes = _shapes_in(head)
+            if shapes:
+                dt, dims = shapes[0]
+                nn = 1
+                for dd in dims:
+                    nn *= dd
+                res_b = nn * _DTYPE_BYTES[dt]
+                result_bytes += res_b * m_
+            if hbm_level and kind not in _FREE_OPS:
+                # result write + operand reads (looked up in symtab)
+                traffic = res_b
+                margs = re.search(rf"{re.escape(kind)}\(([^)]*)\)", head)
+                if margs:
+                    for a in margs.group(1).split(","):
+                        a = a.strip().lstrip("%")
+                        if a in sym:
+                            ops_sh = _shapes_in(
+                                sym[a].split(" metadata=")[0])
+                            if ops_sh:
+                                dt2, dims2 = ops_sh[0]
+                                nn2 = 1
+                                for dd in dims2:
+                                    nn2 *= dd
+                                traffic += nn2 * _DTYPE_BYTES[dt2]
+                hbm_bytes += traffic * m_
+            base = kind.replace("-start", "")
+            if base in _COLLECTIVES and not kind.endswith("-done"):
+                b = shape_bytes(head)
+                coll_bytes[base] = coll_bytes.get(base, 0) + b * m_
+                coll_count[base] = coll_count.get(base, 0) + 1
+            if kind == "dot":
+                flops = _dot_flops(rhs, sym)
+                dot_flops += flops * m_
+
+    return HloStats(collective_bytes=coll_bytes,
+                    collective_count=coll_count,
+                    dot_flops=dot_flops, result_bytes=result_bytes,
+                    hbm_bytes=hbm_bytes, trips=body_trip)
+
+
+def _dot_flops(rhs: str, sym: dict[str, str]) -> int:
+    """2 x prod(result dims) x prod(lhs contracting dim sizes)."""
+    res = _shapes_in(rhs)
+    if not res:
+        return 0
+    _, rdims = res[0]
+    out = 1
+    for d in rdims:
+        out *= d
+    margs = re.search(r"dot\(([^)]*)\)", rhs)
+    mcon = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
+    if not margs or not mcon:
+        return 2 * out
+    lhs_name = margs.group(1).split(",")[0].strip().lstrip("%")
+    lhs_rhs = sym.get(lhs_name)
+    if lhs_rhs is None:
+        # operand may be a parameter defined with explicit shape in rhs
+        return 2 * out
+    lshapes = _shapes_in(lhs_rhs)
+    if not lshapes:
+        return 2 * out
+    _, ldims = lshapes[0]
+    contract = 1
+    for i in mcon.group(1).split(","):
+        if i and int(i) < len(ldims):
+            contract *= ldims[int(i)]
+    return 2 * out * contract
+
+
+# Back-compat aliases used by dryrun
+def analyze_collectives(hlo: str) -> HloStats:
+    return analyze(hlo)

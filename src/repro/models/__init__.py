@@ -1,0 +1,4 @@
+from repro.models.model import (BlockSpec, ModelConfig, abstract_params,  # noqa: F401
+                                forward, init_cache, init_params, prefill)
+from repro.models.steps import (loss_fn, make_decode_step,  # noqa: F401
+                                make_prefill_step, make_train_step)

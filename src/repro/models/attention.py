@@ -1,0 +1,160 @@
+"""Attention: dense, chunked (online-softmax) and decode paths.
+
+All paths share one math definition (``ref``-style dense) and are
+differentially tested against each other. The chunked path is the default
+for long sequences: it never materializes the (Sq, Sk) score matrix —
+an lax.scan over KV chunks carries the online-softmax state, which is the
+XLA-level analogue of FlashAttention and keeps the dry-run's HLO byte
+counts honest. On real TPUs the Pallas kernel (repro.kernels.flash_attention)
+replaces the inner loop; the ``impl`` switch selects it.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def _mask_bias(q_pos: jax.Array, k_pos: jax.Array, causal: bool,
+               window: int | None) -> jax.Array:
+    """(Sq, Sk) additive bias: 0 where attending allowed, NEG_INF otherwise."""
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), dtype=bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        ok &= k_pos[None, :] > (q_pos[:, None] - window)
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def dense_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int | None = None,
+                    logit_softcap: float | None = None,
+                    q_offset: jax.Array | int = 0,
+                    k_offset: jax.Array | int = 0,
+                    kv_len: jax.Array | None = None,
+                    scale: float | None = None) -> jax.Array:
+    """Reference attention. q: (B, Sq, Hq, D); k, v: (B, Sk, Hkv, D).
+
+    ``kv_len``: optional (B,) active KV length (entries >= kv_len masked) —
+    used for decode with a pre-allocated cache.
+    """
+    b, sq, hq, d = q.shape
+    _, sk, hkv, _ = k.shape
+    g = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    qr = q.reshape(b, sq, hkv, g, d).astype(jnp.float32) * scale
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qr, k.astype(jnp.float32))
+    if logit_softcap is not None:
+        scores = jnp.tanh(scores / logit_softcap) * logit_softcap
+    q_pos = jnp.asarray(q_offset) + jnp.arange(sq)
+    k_pos = jnp.asarray(k_offset) + jnp.arange(sk)
+    scores = scores + _mask_bias(q_pos, k_pos, causal, window)
+    if kv_len is not None:
+        live = k_pos[None, :] < kv_len[:, None]  # (B, Sk)
+        scores = jnp.where(live[:, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, sq, hq, d).astype(q.dtype)
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True, window: int | None = None,
+                      logit_softcap: float | None = None,
+                      chunk_size: int = 512,
+                      scale: float | None = None) -> jax.Array:
+    """Online-softmax attention, scanning over KV chunks (no S^2 buffer)."""
+    b, sq, hq, d = q.shape
+    _, sk, hkv, _ = k.shape
+    g = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    if sk % chunk_size:
+        raise ValueError(f"sk={sk} not divisible by chunk={chunk_size}")
+    n_chunks = sk // chunk_size
+    qr = (q.reshape(b, sq, hkv, g, d).astype(jnp.float32) * scale)
+    kc = k.reshape(b, n_chunks, chunk_size, hkv, d)
+    vc = v.reshape(b, n_chunks, chunk_size, hkv, d)
+    q_pos = jnp.arange(sq)
+
+    def body(carry, xs):
+        acc, row_max, denom = carry
+        ki, vi, c_idx = xs
+        scores = jnp.einsum("bqhgd,bkhd->bhgqk", qr, ki.astype(jnp.float32))
+        if logit_softcap is not None:
+            scores = jnp.tanh(scores / logit_softcap) * logit_softcap
+        k_pos = c_idx * chunk_size + jnp.arange(chunk_size)
+        scores = scores + _mask_bias(q_pos, k_pos, causal, window)
+        new_max = jnp.maximum(row_max, jnp.max(scores, axis=-1))
+        # renormalize previous accumulator
+        corr = jnp.exp(row_max - new_max)
+        p = jnp.exp(scores - new_max[..., None])
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p, vi.astype(jnp.float32))
+        denom = denom * corr + jnp.sum(p, axis=-1)
+        return (acc, new_max, denom), None
+
+    acc0 = jnp.zeros((b, hkv, g, sq, d), jnp.float32)
+    max0 = jnp.full((b, hkv, g, sq), NEG_INF, jnp.float32)
+    den0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    (acc, _, denom), _ = jax.lax.scan(
+        body, (acc0, max0, den0),
+        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0),
+         jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(denom[..., None], 1e-30)
+    out = jnp.moveaxis(out, 3, 1)  # (b, sq, hkv, g, d)
+    return out.reshape(b, sq, hq, d).astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array, *,
+                     kv_len: jax.Array, window: int | None = None,
+                     logit_softcap: float | None = None,
+                     scale: float | None = None) -> jax.Array:
+    """Single-step decode. q: (B, 1, Hq, D); caches: (B, Smax, Hkv, D).
+
+    The cache's sequence dim may be sharded over mesh axes; the softmax
+    reduction over Sk then lowers to the split-K (flash-decode) collective
+    pattern under GSPMD automatically.
+    """
+    b = q.shape[0]
+    q_off = kv_len - 1  # current token position per batch element
+    sk = k_cache.shape[1]
+    _, _, hq, d = q.shape
+    hkv = k_cache.shape[2]
+    g = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    qr = q.reshape(b, 1, hkv, g, d).astype(jnp.float32) * scale
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qr, k_cache.astype(jnp.float32))
+    if logit_softcap is not None:
+        scores = jnp.tanh(scores / logit_softcap) * logit_softcap
+    k_pos = jnp.arange(sk)
+    ok = k_pos[None, :] < kv_len[:, None]  # (B, Sk) causal: only written slots
+    if window is not None:
+        ok &= k_pos[None, :] > (q_off[:, None] - window)
+    scores = jnp.where(ok[:, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs,
+                     v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, hq, d).astype(q.dtype)
+
+
+def attention(q, k, v, *, causal=True, window=None, logit_softcap=None,
+              impl: str = "auto", chunk_size: int = 512, scale=None):
+    """Dispatch: dense for short seq, chunked for long, pallas on TPU."""
+    sk = k.shape[1]
+    if impl == "auto":
+        impl = "chunked" if sk > 2048 else "dense"
+    if impl == "dense":
+        return dense_attention(q, k, v, causal=causal, window=window,
+                               logit_softcap=logit_softcap, scale=scale)
+    if impl == "chunked":
+        cs = min(chunk_size, sk)
+        return chunked_attention(q, k, v, causal=causal, window=window,
+                                 logit_softcap=logit_softcap,
+                                 chunk_size=cs, scale=scale)
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        return kops.flash_attention(q, k, v, causal=causal, window=window,
+                                    logit_softcap=logit_softcap, scale=scale)
+    raise ValueError(impl)

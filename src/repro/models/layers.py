@@ -1,0 +1,185 @@
+"""Core neural-net layers shared by all assigned architectures.
+
+Pure-function style: parameters are nested dicts of jnp arrays; every layer
+is ``apply(params, x, ...)``. Initializers mirror the apply functions so the
+same tree structure can be built either with real arrays or with
+``jax.eval_shape`` (for the allocation-free dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32) -> jax.Array:
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), dtype=jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), dtype=jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.zeros((d,), dtype=dtype)}
+
+
+def rmsnorm(params: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm with (1 + scale) parameterization (Gemma/LLaMA style)."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + params["scale"].astype(jnp.float32))).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (RoPE + M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies, shape (head_dim // 2,)."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Apply rotary embedding.
+
+    x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq).
+    """
+    half = x.shape[-1] // 2
+    inv = rope_freqs(x.shape[-1], theta)  # (half,)
+    angles = positions[..., None].astype(jnp.float32) * inv  # (..., seq, half)
+    cos = jnp.cos(angles)[..., None, :]  # (..., seq, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, theta: float,
+                sections: tuple[int, ...]) -> jax.Array:
+    """Multimodal RoPE (Qwen2-VL). positions: (3, ..., seq) for (t, h, w).
+
+    ``sections`` partitions the half-dim rotary channels among the three
+    position components; sum(sections) == head_dim // 2.
+    """
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    inv = rope_freqs(x.shape[-1], theta)  # (half,)
+    # angles per component: (3, ..., seq, half)
+    angles_full = positions[..., None].astype(jnp.float32) * inv
+    # one-hot select which of (t, h, w) drives each rotary channel group
+    idx = jnp.repeat(jnp.arange(3), jnp.array(sections),
+                     total_repeat_length=half)  # (half,)
+    sel = jax.nn.one_hot(idx, 3, dtype=jnp.float32).T  # (3, half)
+    sel = sel.reshape((3,) + (1,) * (angles_full.ndim - 2) + (half,))
+    angles = jnp.sum(angles_full * sel, axis=0)  # (..., seq, half)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int, dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi_gate": dense_init(k1, d_model, d_ff, dtype),
+        "wi_up": dense_init(k2, d_model, d_ff, dtype),
+        "wo": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def _act(x: jax.Array, kind: str) -> jax.Array:
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    raise ValueError(kind)
+
+
+def mlp(params: Params, x: jax.Array, act: str = "silu") -> jax.Array:
+    h = _act(x @ params["wi_gate"], act) * (x @ params["wi_up"])
+    return h @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Softcap
+# ---------------------------------------------------------------------------
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    return jnp.tanh(x / cap) * cap
+
+
+# ---------------------------------------------------------------------------
+# Cross entropy
+# ---------------------------------------------------------------------------
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array,
+                       mask: jax.Array | None = None) -> jax.Array:
+    """Mean token cross-entropy. logits (..., V) fp32; labels (...)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def chunked_cross_entropy_loss(x: jax.Array, embed: jax.Array,
+                               labels: jax.Array,
+                               num_chunks: int = 8,
+                               final_softcap: float | None = None) -> jax.Array:
+    """Cross-entropy without materializing full (T, V) logits.
+
+    x: (T, d) final hidden states, embed: (V, d) output embedding matrix,
+    labels: (T,). Splits T into chunks; each chunk computes its own logits,
+    reduces to per-token nll, and discards the logits. This is a
+    beyond-paper memory optimization (§Perf) — peak bytes drop from
+    O(T * V) to O(T/num_chunks * V).
+    """
+    t = x.shape[0]
+    pad = (-t) % num_chunks
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+        labels = jnp.pad(labels, (0, pad), constant_values=-1)
+    xc = x.reshape(num_chunks, -1, x.shape[-1])
+    lc = labels.reshape(num_chunks, -1)
+
+    def body(carry, xs):
+        xi, li = xs
+        logits = (xi @ embed.T).astype(jnp.float32)
+        if final_softcap is not None:
+            logits = softcap(logits, final_softcap)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, jnp.maximum(li, 0)[..., None],
+                                   axis=-1)[..., 0]
+        valid = (li >= 0).astype(jnp.float32)
+        nll = (logz - gold) * valid
+        return (carry[0] + jnp.sum(nll), carry[1] + jnp.sum(valid)), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0.0), jnp.float32(0.0)),
+                                 (xc, lc))
+    return tot / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,506 @@
+"""Composable decoder/encoder LM covering all 10 assigned architectures.
+
+A model is a stack of ``num_layers`` blocks. Heterogeneous interleaving
+(local/global attention, mamba/attention, dense/MoE) is expressed as a
+*period pattern*: a tuple of P ``BlockSpec``s cycled K = num_layers / P
+times. The forward pass is a single ``lax.scan`` over K whose body applies
+the P (statically known) blocks — HLO size stays O(P) while parameters and
+caches are stacked along the leading K dim. This is what keeps the
+512-device dry-run compiles tractable for 48-layer models.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import (apply_mrope, apply_rope, dense_init,
+                                 embed_init, mlp, mlp_init, rmsnorm,
+                                 rmsnorm_init, softcap)
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockSpec:
+    mixer: str  # "attn" | "attn_local" | "mamba"
+    mlp: str    # "dense" | "moe" | "none"
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                       # dense|moe|ssm|hybrid|audio|vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    pattern: tuple[BlockSpec, ...]
+    # attention
+    causal: bool = True
+    window: int = 0                   # sliding window for "attn_local"
+    rope_theta: float = 10_000.0
+    local_rope_theta: float = 0.0     # 0 => use rope_theta
+    use_rope: bool = True             # jamba/hubert: no rotary positions
+    qk_norm: bool = False
+    attn_logit_softcap: float = 0.0   # 0 => off
+    final_logit_softcap: float = 0.0
+    use_post_norm: bool = False       # gemma-style post-sublayer norms
+    # moe
+    num_experts: int = 0
+    top_k: int = 0
+    d_ff_expert: int = 0
+    num_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    # ssm (mamba2)
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 256
+    # embeddings / io
+    tie_embeddings: bool = True
+    embed_scale: bool = False
+    frontend: str = "tokens"          # tokens | frames | patches
+    frontend_dim: int = 0
+    mrope_sections: tuple[int, ...] = ()
+    act: str = "silu"
+    norm_eps: float = 1e-6
+    # numerics / execution
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    remat: bool = True
+    remat_policy: str = "full"        # full | dots (save matmul outs)
+    attn_impl: str = "auto"
+    attn_chunk: int = 512
+    ce_chunks: int = 8
+    train_microbatches: int = 4
+    # sequence parallelism (beyond-paper opt, EXPERIMENTS §Perf):
+    # activation sharding constraint between blocks — batch dims over
+    # act_shard_batch, sequence over act_shard_seq. Empty = off.
+    act_shard_batch: tuple[str, ...] = ()
+    act_shard_seq: tuple[str, ...] = ()
+
+    @property
+    def period(self) -> int:
+        return len(self.pattern)
+
+    @property
+    def repeats(self) -> int:
+        assert self.num_layers % self.period == 0, (self.name,)
+        return self.num_layers // self.period
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def layer_spec(self, i: int) -> BlockSpec:
+        return self.pattern[i % self.period]
+
+    def num_params(self) -> int:
+        """Total parameter count (analytic, matches init)."""
+        shapes = jax.eval_shape(partial(init_params, self),
+                                jax.random.key(0))
+        return sum(math.prod(l.shape) for l in jax.tree.leaves(shapes))
+
+    def num_active_params(self) -> int:
+        """Active params per token (MoE: only top_k experts count)."""
+        total = self.num_params()
+        if self.num_experts == 0:
+            return total
+        n_moe_layers = self.repeats * sum(
+            1 for s in self.pattern if s.mlp == "moe")
+        per_expert = 3 * self.d_model * self.d_ff_expert
+        inactive = n_moe_layers * (self.num_experts - self.top_k) * per_expert
+        return total - inactive
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_block(cfg: ModelConfig, spec: BlockSpec, key) -> Params:
+    ks = jax.random.split(key, 8)
+    dt = cfg.pdtype
+    p: Params = {"ln_mixer": rmsnorm_init(cfg.d_model, dt)}
+    if spec.mixer.startswith("attn"):
+        p["attn"] = {
+            "wq": dense_init(ks[0], cfg.d_model,
+                             cfg.num_heads * cfg.head_dim, dt),
+            "wk": dense_init(ks[1], cfg.d_model,
+                             cfg.num_kv_heads * cfg.head_dim, dt),
+            "wv": dense_init(ks[2], cfg.d_model,
+                             cfg.num_kv_heads * cfg.head_dim, dt),
+            "wo": dense_init(ks[3], cfg.num_heads * cfg.head_dim,
+                             cfg.d_model, dt),
+        }
+        if cfg.qk_norm:
+            p["attn"]["q_norm"] = rmsnorm_init(cfg.head_dim, dt)
+            p["attn"]["k_norm"] = rmsnorm_init(cfg.head_dim, dt)
+    elif spec.mixer == "mamba":
+        p["mamba"] = ssm_lib.mamba2_init(
+            ks[0], cfg.d_model, state=cfg.ssm_state, conv=cfg.ssm_conv,
+            expand=cfg.ssm_expand, head_dim=cfg.ssm_head_dim, dtype=dt)
+    else:
+        raise ValueError(spec.mixer)
+    if cfg.use_post_norm:
+        p["post_ln_mixer"] = rmsnorm_init(cfg.d_model, dt)
+    if spec.mlp == "dense":
+        p["ln_mlp"] = rmsnorm_init(cfg.d_model, dt)
+        p["mlp"] = mlp_init(ks[4], cfg.d_model, cfg.d_ff, dt)
+    elif spec.mlp == "moe":
+        p["ln_mlp"] = rmsnorm_init(cfg.d_model, dt)
+        p["moe"] = moe_lib.moe_init(ks[4], cfg.d_model, cfg.d_ff_expert,
+                                    cfg.num_experts,
+                                    cfg.num_shared_experts, dt)
+    if cfg.use_post_norm and spec.mlp != "none":
+        p["post_ln_mlp"] = rmsnorm_init(cfg.d_model, dt)
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    keys = jax.random.split(key, cfg.period + 3)
+    blocks = []
+    for pidx in range(cfg.period):
+        bkeys = jax.random.split(keys[pidx], cfg.repeats)
+        blocks.append(jax.vmap(partial(_init_block, cfg,
+                                       cfg.pattern[pidx]))(bkeys))
+    p: Params = {
+        "embed": embed_init(keys[-3], cfg.vocab_size, cfg.d_model,
+                            cfg.pdtype),
+        "blocks": tuple(blocks),
+        "final_norm": rmsnorm_init(cfg.d_model, cfg.pdtype),
+    }
+    if cfg.frontend in ("frames", "patches") and cfg.frontend_dim:
+        p["frontend_proj"] = dense_init(keys[-2], cfg.frontend_dim,
+                                        cfg.d_model, cfg.pdtype)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(keys[-1], cfg.d_model, cfg.vocab_size,
+                                  cfg.pdtype)
+    return p
+
+
+def abstract_params(cfg: ModelConfig) -> Params:
+    return jax.eval_shape(partial(init_params, cfg), jax.random.key(0))
+
+
+# ---------------------------------------------------------------------------
+# Block application (full sequence)
+# ---------------------------------------------------------------------------
+
+def _attn_block(cfg: ModelConfig, spec: BlockSpec, p: Params, h: jax.Array,
+                positions: jax.Array) -> jax.Array:
+    b, s, _ = h.shape
+    local = spec.mixer == "attn_local"
+    theta = (cfg.local_rope_theta or cfg.rope_theta) if local else cfg.rope_theta
+    q = (h @ p["wq"]).reshape(b, s, cfg.num_heads, cfg.head_dim)
+    k = (h @ p["wk"]).reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    v = (h @ p["wv"]).reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    if cfg.mrope_sections:
+        q = apply_mrope(q, positions, theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions, theta, cfg.mrope_sections)
+    elif cfg.use_rope:
+        q = apply_rope(q, positions, theta)
+        k = apply_rope(k, positions, theta)
+    out = attn_lib.attention(
+        q, k, v, causal=cfg.causal,
+        window=cfg.window if local else None,
+        logit_softcap=cfg.attn_logit_softcap or None,
+        impl=cfg.attn_impl, chunk_size=cfg.attn_chunk)
+    out = out.reshape(b, s, cfg.num_heads * cfg.head_dim) @ p["wo"]
+    cache = {"k": k.astype(cfg.cdtype), "v": v.astype(cfg.cdtype)}
+    return out, cache
+
+
+def _apply_block_with_cache(cfg: ModelConfig, spec: BlockSpec, p: Params,
+                            h: jax.Array, positions: jax.Array
+                            ) -> tuple[jax.Array, jax.Array, Any]:
+    aux = jnp.float32(0.0)
+    x = rmsnorm(p["ln_mixer"], h, cfg.norm_eps)
+    if spec.mixer.startswith("attn"):
+        out, cache = _attn_block(cfg, spec, p["attn"], x, positions)
+    else:
+        out, cache = ssm_lib.mamba2_forward(
+            p["mamba"], x, state=cfg.ssm_state, conv=cfg.ssm_conv,
+            expand=cfg.ssm_expand, head_dim=cfg.ssm_head_dim,
+            chunk=cfg.ssm_chunk, norm_eps=cfg.norm_eps, return_cache=True)
+    if cfg.use_post_norm:
+        out = rmsnorm(p["post_ln_mixer"], out, cfg.norm_eps)
+    h = h + out
+    if spec.mlp != "none":
+        x = rmsnorm(p["ln_mlp"], h, cfg.norm_eps)
+        if spec.mlp == "dense":
+            out = mlp(p["mlp"], x, act=cfg.act)
+        else:
+            b, s, d = x.shape
+            out, aux = moe_lib.moe_apply(
+                p["moe"], x.reshape(b * s, d), top_k=cfg.top_k,
+                capacity_factor=cfg.capacity_factor, act=cfg.act)
+            out = out.reshape(b, s, d)
+        if cfg.use_post_norm:
+            out = rmsnorm(p["post_ln_mlp"], out, cfg.norm_eps)
+        h = h + out
+    return h, aux, cache
+
+
+def _apply_block(cfg: ModelConfig, spec: BlockSpec, p: Params, h: jax.Array,
+                 positions: jax.Array) -> tuple[jax.Array, jax.Array]:
+    h, aux, _ = _apply_block_with_cache(cfg, spec, p, h, positions)
+    return h, aux
+
+
+def _embed_inputs(cfg: ModelConfig, params: Params, batch: dict
+                  ) -> tuple[jax.Array, jax.Array]:
+    """Returns (h (B, S, d), positions). The embed table is cast to
+    compute dtype BEFORE the gather — gathering f32 rows and casting
+    after doubles the gather's HBM traffic and (sharded) forces an f32
+    all-gather of the table (§Perf iteration 1)."""
+    cd = cfg.cdtype
+    if cfg.frontend == "tokens":
+        h = jnp.take(params["embed"].astype(cd), batch["tokens"], axis=0)
+    elif cfg.frontend == "frames":
+        h = (batch["frames"].astype(cd)
+             @ params["frontend_proj"].astype(cd))
+    elif cfg.frontend == "patches":
+        tok = jnp.take(params["embed"].astype(cd), batch["tokens"],
+                       axis=0)
+        patches = (batch["patches"].astype(cd)
+                   @ params["frontend_proj"].astype(cd))
+        h = jnp.concatenate([patches, tok], axis=1)
+    else:
+        raise ValueError(cfg.frontend)
+    if cfg.embed_scale:
+        h = h * jnp.asarray(math.sqrt(cfg.d_model), cd)
+    if "positions" in batch:
+        positions = batch["positions"]
+    else:
+        shape = h.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(shape[1]), shape)
+        if cfg.mrope_sections:
+            positions = jnp.broadcast_to(positions, (3,) + shape)
+    return h, positions
+
+
+def _cast_blocks(cfg: ModelConfig, params: Params):
+    cd = cfg.cdtype
+    return jax.tree.map(lambda a: a.astype(cd) if a.dtype == jnp.float32
+                        and a.ndim > 1 else a, params["blocks"])
+
+
+def _seq_constraint(cfg: ModelConfig, h: jax.Array) -> jax.Array:
+    """Sequence-parallel activation sharding (Megatron-SP analogue):
+    between blocks the (B, S, d) activations live sharded over the
+    model axis on S. GSPMD then lowers the per-block TP all-reduce
+    into reduce-scatter + all-gather and the remat carry shrinks by
+    the model-axis size."""
+    if not cfg.act_shard_seq:
+        return h
+    from jax.sharding import PartitionSpec as P
+    b_ax = cfg.act_shard_batch or None
+    s_ax = cfg.act_shard_seq
+    spec = P(b_ax if b_ax is None or len(b_ax) > 1 else b_ax[0],
+             s_ax if len(s_ax) > 1 else s_ax[0], None)
+    return jax.lax.with_sharding_constraint(h, spec)
+
+
+def _remat(cfg: ModelConfig, body):
+    if not cfg.remat:
+        return body
+    if cfg.remat_policy == "dots":
+        pol = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(body, policy=pol)
+    return jax.checkpoint(body)
+
+
+def forward(cfg: ModelConfig, params: Params, batch: dict
+            ) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence forward -> (final hidden states (B, S, d), moe aux)."""
+    h, positions = _embed_inputs(cfg, params, batch)
+    h = _seq_constraint(cfg, h)
+    blocks = _cast_blocks(cfg, params)
+
+    def body(carry, layer_params):
+        h, aux = carry
+        for pidx, spec in enumerate(cfg.pattern):
+            h, a = _apply_block(cfg, spec, layer_params[pidx], h, positions)
+            aux = aux + a
+        h = _seq_constraint(cfg, h)
+        return (h, aux), None
+
+    body = _remat(cfg, body)
+    (h, aux), _ = jax.lax.scan(body, (h, jnp.float32(0.0)), blocks)
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    return h, aux
+
+
+def prefill(cfg: ModelConfig, params: Params, batch: dict
+            ) -> tuple[jax.Array, Any]:
+    """Full-sequence forward that also materializes decode caches.
+
+    Returns (final hidden states (B, S, d), caches) where caches match the
+    ``init_cache`` layout with max_len == S (post-RoPE keys, as decode
+    expects).
+    """
+    h, positions = _embed_inputs(cfg, params, batch)
+    h = _seq_constraint(cfg, h)
+    blocks = _cast_blocks(cfg, params)
+
+    def body(carry, layer_params):
+        h, aux = carry
+        caches = []
+        for pidx, spec in enumerate(cfg.pattern):
+            h, a, cache = _apply_block_with_cache(
+                cfg, spec, layer_params[pidx], h, positions)
+            aux = aux + a
+            caches.append(cache)
+        h = _seq_constraint(cfg, h)
+        return (h, aux), tuple(caches)
+
+    body = _remat(cfg, body)
+    (h, _), caches = jax.lax.scan(body, (h, jnp.float32(0.0)), blocks)
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    return h, caches
+
+
+def output_embedding(cfg: ModelConfig, params: Params) -> jax.Array:
+    w = params["lm_head"].T if "lm_head" in params else params["embed"]
+    return w  # (V, d)
+
+
+def logits_from_hidden(cfg: ModelConfig, params: Params, h: jax.Array
+                       ) -> jax.Array:
+    emb = output_embedding(cfg, params).astype(cfg.cdtype)
+    logits = jnp.einsum("bsd,vd->bsv", h, emb).astype(jnp.float32)
+    if cfg.final_logit_softcap:
+        logits = softcap(logits, cfg.final_logit_softcap)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Decode path (single-token step with caches)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int,
+               abstract: bool = False) -> Params:
+    """Per-period-position caches stacked along K."""
+    def make(shape, dtype):
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, dtype)
+        return jnp.zeros(shape, dtype)
+
+    k = cfg.repeats
+    caches = []
+    for spec in cfg.pattern:
+        if spec.mixer.startswith("attn"):
+            kv_shape = (k, batch_size, max_len, cfg.num_kv_heads,
+                        cfg.head_dim)
+            caches.append({"k": make(kv_shape, cfg.cdtype),
+                           "v": make(kv_shape, cfg.cdtype)})
+        else:
+            d_inner, nheads = ssm_lib.ssm_dims(cfg.d_model, cfg.ssm_expand,
+                                               cfg.ssm_head_dim)
+            caches.append({
+                "conv": make((k, batch_size, cfg.ssm_conv - 1,
+                              d_inner + 2 * cfg.ssm_state), cfg.cdtype),
+                "ssm": make((k, batch_size, nheads, cfg.ssm_state,
+                             cfg.ssm_head_dim), jnp.float32),
+            })
+    return tuple(caches)
+
+
+def _attn_decode_block(cfg: ModelConfig, spec: BlockSpec, p: Params,
+                       cache: Params, h: jax.Array, kv_len: jax.Array
+                       ) -> tuple[jax.Array, Params]:
+    b, s, _ = h.shape  # s == 1
+    local = spec.mixer == "attn_local"
+    theta = (cfg.local_rope_theta or cfg.rope_theta) if local else cfg.rope_theta
+    q = (h @ p["wq"]).reshape(b, s, cfg.num_heads, cfg.head_dim)
+    k = (h @ p["wk"]).reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    v = (h @ p["wv"]).reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    pos = (kv_len - 1)[:, None]  # (B, 1) current position
+    if cfg.mrope_sections:
+        pos3 = jnp.broadcast_to(pos, (3, b, 1))
+        q = apply_mrope(q, pos3, theta, cfg.mrope_sections)
+        k = apply_mrope(k, pos3, theta, cfg.mrope_sections)
+    elif cfg.use_rope:
+        q = apply_rope(q, pos, theta)
+        k = apply_rope(k, pos, theta)
+    # write new k/v at position kv_len - 1
+    idx = kv_len - 1
+    kc = cache["k"].at[jnp.arange(b), idx].set(k[:, 0].astype(cfg.cdtype))
+    vc = cache["v"].at[jnp.arange(b), idx].set(v[:, 0].astype(cfg.cdtype))
+    out = attn_lib.decode_attention(
+        q, kc, vc, kv_len=kv_len,
+        window=cfg.window if local else None,
+        logit_softcap=cfg.attn_logit_softcap or None)
+    out = out.reshape(b, s, cfg.num_heads * cfg.head_dim) @ p["wo"]
+    return out, {"k": kc, "v": vc}
+
+
+def decode_step_hidden(cfg: ModelConfig, params: Params, caches,
+                       tokens: jax.Array, kv_len: jax.Array
+                       ) -> tuple[jax.Array, Any]:
+    """One decode step. tokens: (B, 1) int32; kv_len: (B,) lengths
+    *including* the new token. Returns (hidden (B, 1, d), new caches)."""
+    cd = cfg.cdtype
+    h = jnp.take(params["embed"], tokens, axis=0).astype(cd)
+    if cfg.embed_scale:
+        h = h * jnp.asarray(math.sqrt(cfg.d_model), cd)
+    blocks = _cast_blocks(cfg, params)
+
+    def body(h, xs):
+        layer_params, layer_caches = xs
+        new_caches = []
+        for pidx, spec in enumerate(cfg.pattern):
+            p, c = layer_params[pidx], layer_caches[pidx]
+            x = rmsnorm(p["ln_mixer"], h, cfg.norm_eps)
+            if spec.mixer.startswith("attn"):
+                out, nc = _attn_decode_block(cfg, spec, p["attn"], c, x,
+                                             kv_len)
+            else:
+                out, nc = ssm_lib.mamba2_decode(
+                    p["mamba"], c, x, state=cfg.ssm_state,
+                    conv=cfg.ssm_conv, expand=cfg.ssm_expand,
+                    head_dim=cfg.ssm_head_dim, norm_eps=cfg.norm_eps)
+            if cfg.use_post_norm:
+                out = rmsnorm(p["post_ln_mixer"], out, cfg.norm_eps)
+            h = h + out
+            if spec.mlp != "none":
+                x = rmsnorm(p["ln_mlp"], h, cfg.norm_eps)
+                if spec.mlp == "dense":
+                    out = mlp(p["mlp"], x, act=cfg.act)
+                else:
+                    b, s, d = x.shape
+                    out, _ = moe_lib.moe_apply(
+                        p["moe"], x.reshape(b * s, d), top_k=cfg.top_k,
+                        capacity_factor=cfg.capacity_factor, act=cfg.act)
+                    out = out.reshape(b, s, d)
+                if cfg.use_post_norm:
+                    out = rmsnorm(p["post_ln_mlp"], out, cfg.norm_eps)
+                h = h + out
+            new_caches.append(nc)
+        return h, tuple(new_caches)
+
+    h, new_caches = jax.lax.scan(body, h, (blocks, caches))
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    return h, new_caches

@@ -1,0 +1,196 @@
+"""Mamba-2 (SSD, state-space duality) mixer — chunked train path + decode.
+
+Follows "Transformers are SSMs" (arXiv:2405.21060): the sequence is split
+into chunks; within a chunk the quadratic (dual) form is used, across
+chunks a recurrent state (B heads, N state, P head-dim) is carried with
+``lax.scan``. The scan-over-chunks formulation keeps peak memory at
+O(chunk^2) instead of O(L * chunk) and is the structure a TPU Pallas
+kernel would tile (one chunk per grid step, state in VMEM).
+
+Projections are kept *separate* (z, x, B, C, dt) rather than fused, so
+each output dim can be sharded cleanly over the `model` mesh axis without
+mid-tensor slicing (see DESIGN.md §6).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rmsnorm, rmsnorm_init
+
+Params = dict[str, Any]
+
+
+def ssm_dims(d_model: int, expand: int, head_dim: int) -> tuple[int, int]:
+    d_inner = expand * d_model
+    nheads = d_inner // head_dim
+    return d_inner, nheads
+
+
+def mamba2_init(key, d_model: int, *, state: int, conv: int, expand: int,
+                head_dim: int, dtype=jnp.float32) -> Params:
+    d_inner, nheads = ssm_dims(d_model, expand, head_dim)
+    ks = jax.random.split(key, 8)
+    return {
+        "wz": dense_init(ks[0], d_model, d_inner, dtype),
+        "wx": dense_init(ks[1], d_model, d_inner, dtype),
+        "wB": dense_init(ks[2], d_model, state, dtype),
+        "wC": dense_init(ks[3], d_model, state, dtype),
+        "wdt": dense_init(ks[4], d_model, nheads, dtype),
+        # depthwise causal conv over the x/B/C channels
+        "conv_w": (jax.random.normal(ks[5], (conv, d_inner + 2 * state),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((d_inner + 2 * state,), dtype),
+        "dt_bias": jnp.zeros((nheads,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nheads)).astype(dtype),
+        "D": jnp.ones((nheads,), dtype),
+        "norm": rmsnorm_init(d_inner, dtype),
+        "wo": dense_init(ks[6], d_inner, d_model, dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: (B, L, C); w: (W, C). Returns (B, L, C)."""
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(width):  # width is tiny (4): unrolled shifted adds
+        out = out + xp[:, i:i + x.shape[1], :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, a_log: jax.Array,
+                bmat: jax.Array, cmat: jax.Array, *, chunk: int,
+                init_state: jax.Array | None = None
+                ) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    x: (B, L, H, P) already dt-scaled inputs NOT included — raw x.
+    dt: (B, L, H) positive step sizes; a_log: (H,) with A = -exp(a_log).
+    bmat/cmat: (B, L, N) (single group).
+    Returns (y (B, L, H, P), final_state (B, H, N, P)).
+    """
+    bsz, length, nheads, pdim = x.shape
+    nstate = bmat.shape[-1]
+    if length % chunk:
+        raise ValueError(f"L={length} % chunk={chunk} != 0")
+    nck = length // chunk
+    a = -jnp.exp(a_log.astype(jnp.float32))  # (H,)
+    log_a = dt.astype(jnp.float32) * a  # (B, L, H), <= 0
+
+    def to_chunks(t):
+        return jnp.moveaxis(t.reshape((bsz, nck, chunk) + t.shape[2:]), 1, 0)
+
+    xc, dtc, lac = to_chunks(x), to_chunks(dt), to_chunks(log_a)
+    bc, cc = to_chunks(bmat), to_chunks(cmat)
+    tri = jnp.tril(jnp.ones((chunk, chunk), dtype=bool))
+
+    def body(state, xs):
+        xi, dti, lai, bi, ci = xs
+        # xi: (B, Q, H, P), dti/lai: (B, Q, H), bi/ci: (B, Q, N)
+        cum = jnp.cumsum(lai, axis=1)  # (B, Q, H) decreasing
+        xdt = xi.astype(jnp.float32) * dti.astype(jnp.float32)[..., None]
+        # --- intra-chunk (dual / quadratic form) ---
+        seg = cum[:, :, None, :] - cum[:, None, :, :]  # (B, Qt, Qs, H)
+        # mask BEFORE exp: the upper triangle is exp(+large) -> inf, and
+        # where() would still propagate NaN through the cotangent
+        seg = jnp.where(tri[None, :, :, None], seg, -jnp.inf)
+        decay = jnp.exp(seg)
+        scores = jnp.einsum("btn,bsn->bts", ci.astype(jnp.float32),
+                            bi.astype(jnp.float32))
+        y = jnp.einsum("bts,btsh,bshp->bthp", scores, decay, xdt)
+        # --- inter-chunk from carried state ---
+        y = y + jnp.einsum("btn,bhnp->bthp", ci.astype(jnp.float32),
+                           state) * jnp.exp(cum)[..., None]
+        # --- state update ---
+        decay_to_end = jnp.exp(cum[:, -1:, :] - cum)  # (B, Q, H) in (0, 1]
+        new_contrib = jnp.einsum("bsn,bshp->bhnp", bi.astype(jnp.float32),
+                                 xdt * decay_to_end[..., None])
+        state = jnp.exp(cum[:, -1])[:, :, None, None] * state + new_contrib
+        return state, y
+
+    state0 = (init_state.astype(jnp.float32) if init_state is not None
+              else jnp.zeros((bsz, nheads, nstate, pdim), jnp.float32))
+    final_state, ys = jax.lax.scan(body, state0, (xc, dtc, lac, bc, cc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, length, nheads, pdim)
+    return y.astype(x.dtype), final_state
+
+
+def mamba2_forward(params: Params, x: jax.Array, *, state: int, conv: int,
+                   expand: int, head_dim: int, chunk: int,
+                   norm_eps: float = 1e-6, return_cache: bool = False):
+    """Full-sequence mixer. x: (B, L, d_model) -> (B, L, d_model).
+
+    With ``return_cache`` also returns the decode cache (conv tail + final
+    SSM state), making this the prefill path.
+    """
+    bsz, length, d_model = x.shape
+    d_inner, nheads = ssm_dims(d_model, expand, head_dim)
+    z = x @ params["wz"]
+    xs = x @ params["wx"]
+    bm = x @ params["wB"]
+    cm = x @ params["wC"]
+    dt = jax.nn.softplus((x @ params["wdt"]).astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    xbc_raw = jnp.concatenate([xs, bm, cm], axis=-1)
+    xbc = jax.nn.silu(_causal_conv(xbc_raw, params["conv_w"],
+                                   params["conv_b"]))
+    xs, bm, cm = jnp.split(xbc, [d_inner, d_inner + state], axis=-1)
+    xh = xs.reshape(bsz, length, nheads, head_dim)
+    y, final_state = ssd_chunked(xh, dt, params["a_log"], bm, cm,
+                                 chunk=chunk)
+    y = y + params["D"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(bsz, length, d_inner).astype(x.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z), eps=norm_eps)
+    out = y @ params["wo"]
+    if return_cache:
+        cache = {"conv": xbc_raw[:, -(conv - 1):, :],
+                 "ssm": final_state}
+        return out, cache
+    return out
+
+
+def mamba2_init_cache(batch: int, d_model: int, *, state: int, conv: int,
+                      expand: int, head_dim: int, dtype=jnp.float32) -> Params:
+    d_inner, nheads = ssm_dims(d_model, expand, head_dim)
+    return {
+        "conv": jnp.zeros((batch, conv - 1, d_inner + 2 * state), dtype),
+        "ssm": jnp.zeros((batch, nheads, state, head_dim), jnp.float32),
+    }
+
+
+def mamba2_decode(params: Params, cache: Params, x: jax.Array, *, state: int,
+                  conv: int, expand: int, head_dim: int,
+                  norm_eps: float = 1e-6) -> tuple[jax.Array, Params]:
+    """Single-token step. x: (B, 1, d_model). Returns (y, new_cache)."""
+    bsz, _, d_model = x.shape
+    d_inner, nheads = ssm_dims(d_model, expand, head_dim)
+    z = x @ params["wz"]
+    xs = x @ params["wx"]
+    bm = x @ params["wB"]
+    cm = x @ params["wC"]
+    dt = jax.nn.softplus((x @ params["wdt"]).astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))[:, 0]  # (B,H)
+    xbc = jnp.concatenate([xs, bm, cm], axis=-1)  # (B, 1, C)
+    conv_in = jnp.concatenate([cache["conv"], xbc], axis=1)  # (B, W, C)
+    w = params["conv_w"].astype(jnp.float32)
+    conv_out = jnp.sum(conv_in.astype(jnp.float32) * w[None], axis=1,
+                       keepdims=True) + params["conv_b"].astype(jnp.float32)
+    xbc = jax.nn.silu(conv_out).astype(x.dtype)
+    new_conv = conv_in[:, 1:]
+    xs, bm, cm = jnp.split(xbc, [d_inner, d_inner + state], axis=-1)
+    xh = xs.reshape(bsz, nheads, head_dim).astype(jnp.float32)
+    bm = bm[:, 0].astype(jnp.float32)  # (B, N)
+    cm = cm[:, 0].astype(jnp.float32)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))  # (H,)
+    decay = jnp.exp(dt * a)  # (B, H)
+    xdt = xh * dt[..., None]  # (B, H, P)
+    new_ssm = (decay[..., None, None] * cache["ssm"]
+               + jnp.einsum("bn,bhp->bhnp", bm, xdt))
+    y = jnp.einsum("bn,bhnp->bhp", cm, new_ssm)
+    y = y + params["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(bsz, 1, d_inner).astype(x.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z), eps=norm_eps)
+    return y @ params["wo"], {"conv": new_conv, "ssm": new_ssm}

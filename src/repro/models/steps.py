@@ -1,0 +1,146 @@
+"""Train / prefill / decode step functions.
+
+``make_train_step`` builds the production train step:
+  microbatch grad accumulation (lax.scan) → grad mean → AdamW update.
+Gradient averaging across the data/pod mesh axes is *implicit*: batches are
+sharded over those axes, so GSPMD inserts the (two-step, reduce-scatter +
+all-gather under FSDP) gradient collectives — the same local/global
+aggregation schedule as VXQuery rewrite rule 4.2.2 (see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as model_lib
+from repro.models.layers import chunked_cross_entropy_loss, softcap
+from repro.optim import adamw_update, warmup_cosine
+
+ModelConfig = model_lib.ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def loss_fn(cfg: ModelConfig, params: Any, batch: dict,
+            aux_weight: float = 0.01) -> tuple[jax.Array, dict]:
+    h, moe_aux = model_lib.forward(cfg, params, batch)
+    b, s, d = h.shape
+    labels = batch["labels"]
+    if labels.shape[1] != s:  # vlm: patches prefix carries no labels
+        pad = s - labels.shape[1]
+        labels = jnp.concatenate(
+            [jnp.full((b, pad), -1, labels.dtype), labels], axis=1)
+    emb = model_lib.output_embedding(cfg, params).astype(cfg.cdtype)
+    ce = chunked_cross_entropy_loss(
+        h.reshape(b * s, d), emb, labels.reshape(b * s),
+        num_chunks=cfg.ce_chunks,
+        final_softcap=cfg.final_logit_softcap or None)
+    loss = ce + aux_weight * moe_aux
+    return loss, {"ce": ce, "moe_aux": moe_aux}
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, *, num_microbatches: int = 1,
+                    peak_lr: float = 3e-4, warmup_steps: int = 100,
+                    total_steps: int = 10_000, weight_decay: float = 0.1):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    ``batch`` leaves have leading dim global_batch; it is split into
+    ``num_microbatches`` accumulation steps to bound activation memory.
+    """
+
+    def grads_one(params, micro):
+        (loss, parts), grads = jax.value_and_grad(
+            partial(loss_fn, cfg), has_aux=True)(params, micro)
+        return loss, parts, grads
+
+    def train_step(params, opt_state, batch):
+        if num_microbatches == 1:
+            loss, parts, grads = grads_one(params, batch)
+        else:
+            def split(key, x):
+                # mrope "positions" is (3, B, S): batch lives on axis 1.
+                ax = 1 if key == "positions" else 0
+                n = x.shape[ax] // num_microbatches
+                x = jnp.moveaxis(x, ax, 0)
+                x = x.reshape((num_microbatches, n) + x.shape[1:])
+                return jnp.moveaxis(x, 1, ax + 1)
+            micro_batches = {k: split(k, v) for k, v in batch.items()}
+            zero_grads = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def body(carry, micro):
+                acc, loss_acc = carry
+                loss, _, grads = grads_one(params, micro)
+                acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), acc, grads)
+                return (acc, loss_acc + loss), None
+
+            (grads, loss_sum), _ = jax.lax.scan(
+                body, (zero_grads, jnp.float32(0.0)), micro_batches)
+            inv = 1.0 / num_microbatches
+            grads = jax.tree.map(lambda g: g * inv, grads)
+            loss = loss_sum * inv
+            parts = {}
+        lr = warmup_cosine(opt_state["step"], peak_lr=peak_lr,
+                           warmup_steps=warmup_steps,
+                           total_steps=total_steps)
+        params, opt_state, om = adamw_update(
+            grads, opt_state, params, lr=lr, weight_decay=weight_decay)
+        metrics = {"loss": loss, "lr": lr, **om, **parts}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Serve steps
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ModelConfig):
+    """prefill_step(params, batch) -> (last-token logits, caches)."""
+
+    def prefill_step(params, batch):
+        h, caches = model_lib.prefill(cfg, params, batch)
+        last = h[:, -1:, :]
+        logits = model_lib.logits_from_hidden(cfg, params, last)
+        return logits, caches
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    """decode_step(params, caches, tokens (B,1), kv_len (B,))
+    -> (logits (B, 1, V), new caches)."""
+
+    def decode_step(params, caches, tokens, kv_len):
+        h, new_caches = model_lib.decode_step_hidden(
+            cfg, params, caches, tokens, kv_len)
+        logits = model_lib.logits_from_hidden(cfg, params, h)
+        return logits, new_caches
+
+    return decode_step
+
+
+def greedy_decode(cfg: ModelConfig, params, caches, first_token, kv_len,
+                  num_steps: int):
+    """Simple autoregressive loop (used by examples/tests)."""
+    decode_step = make_decode_step(cfg)
+
+    def body(carry, _):
+        caches, tok, kv_len = carry
+        logits, caches = decode_step(params, caches, tok, kv_len)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return (caches, nxt, kv_len + 1), nxt[:, 0]
+
+    (caches, _, kv_len), toks = jax.lax.scan(
+        body, (caches, first_token, kv_len), None, length=num_steps)
+    return jnp.moveaxis(toks, 0, 1), caches, kv_len

@@ -1,0 +1,85 @@
+"""AdamW with global-norm clipping and optional int8 gradient compression.
+
+State layout mirrors the param tree (m, v in fp32) so the same sharding
+rules apply — optimizer state is FSDP-sharded exactly like parameters.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+def adamw_init(params: Params) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+    }
+
+
+def global_norm(tree: Params) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads: Params, max_norm: float
+                        ) -> tuple[Params, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def compress_int8(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8 quantization (for cross-pod gradient
+    exchange; used with error feedback in runtime.compression)."""
+    amax = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12)
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def adamw_update(grads: Params, opt_state: dict, params: Params, *,
+                 lr: jax.Array | float, b1: float = 0.9, b2: float = 0.95,
+                 eps: float = 1e-8, weight_decay: float = 0.1,
+                 max_grad_norm: float = 1.0
+                 ) -> tuple[Params, dict, dict]:
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    grads, grad_norm = clip_by_global_norm(grads, max_grad_norm)
+    step = opt_state["step"] + 1
+    stepf = step.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** stepf
+    bc2 = 1.0 - b2 ** stepf
+
+    def upd(p, g, m, v):
+        m = b1 * m + (1.0 - b1) * g
+        v = b2 * v + (1.0 - b2) * jnp.square(g)
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        wd = weight_decay if p.ndim >= 2 else 0.0  # no decay on norms/bias
+        newp = p.astype(jnp.float32) - lr * (delta + wd * p.astype(jnp.float32))
+        return newp.astype(p.dtype), m, v
+
+    # Flatten/unflatten (not tree.map of tuples): the param tree itself
+    # contains tuple containers (e.g. per-period ``blocks``), which would
+    # confuse an is_leaf=tuple unzip.
+    leaves_p, treedef = jax.tree.flatten(params)
+    leaves_g = treedef.flatten_up_to(grads)
+    leaves_m = treedef.flatten_up_to(opt_state["m"])
+    leaves_v = treedef.flatten_up_to(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v
+           in zip(leaves_p, leaves_g, leaves_m, leaves_v)]
+    new_params = jax.tree.unflatten(treedef, [t[0] for t in out])
+    new_m = jax.tree.unflatten(treedef, [t[1] for t in out])
+    new_v = jax.tree.unflatten(treedef, [t[2] for t in out])
+    new_state = {"step": step, "m": new_m, "v": new_v}
+    return new_params, new_state, {"grad_norm": grad_norm}

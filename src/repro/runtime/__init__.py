@@ -1,0 +1,4 @@
+from repro.runtime.straggler import StragglerMonitor  # noqa: F401
+from repro.runtime.elastic import ElasticState, remesh_plan  # noqa: F401
+from repro.runtime.compression import (compressed_mean,  # noqa: F401
+                                       ErrorFeedback)

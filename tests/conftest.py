@@ -1,0 +1,25 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches
+must see 1 device; only launch/dryrun.py forces 512 host devices, and
+tests/test_distributed.py spawns subprocesses with their own flags."""
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import pytest
+
+from repro.data.weather import WeatherSpec, build_database
+
+
+@pytest.fixture(scope="session")
+def weather_db():
+    spec = WeatherSpec(num_stations=8,
+                       years=(1976, 1999, 2000, 2001, 2003, 2004),
+                       days_per_year=3)
+    return build_database(spec, num_partitions=4)
+
+
+@pytest.fixture(scope="session")
+def weather_db_small():
+    spec = WeatherSpec(num_stations=5, years=(1976, 2000),
+                       days_per_year=2)
+    return build_database(spec, num_partitions=2)

@@ -1,0 +1,86 @@
+"""XQuery 3.0 group-by (the paper's §6 'planned next step', built as a
+beyond-paper feature on the keyed two-step aggregation path)."""
+import numpy as np
+import pytest
+
+from repro.core import ExecConfig, Executor, compile_query
+from repro.core.algebra import GroupBy, walk
+from repro.core.baselines import SaxonLike
+
+GB_QUERY = '''
+for $r in collection("/sensors")/dataCollection/data
+where $r/dataType eq "TMAX"
+group by $st := $r/station
+return ($st, count($r), sum($r/value), max($r/value))
+'''
+
+AVG_QUERY = '''
+for $r in collection("/sensors")/dataCollection/data
+where $r/dataType eq "PRCP"
+group by $st := $r/station
+return ($st, avg($r/value))
+'''
+
+
+def expected_groups(db, dtype, fns):
+    """Hand-rolled oracle over the flat (station, value) pairs from the
+    Saxon-style walker."""
+    sx = SaxonLike(db)
+    flat = sx.run_rows(f'''
+for $r in collection("/sensors")/dataCollection/data
+where $r/dataType eq "{dtype}"
+return ($r/station, $r/value)
+''')
+    groups: dict[str, list[float]] = {}
+    for st, v in flat:
+        groups.setdefault(st, []).append(float(v))
+    out = {}
+    for st, vs in groups.items():
+        row = []
+        for fn in fns:
+            row.append({"count": float(len(vs)), "sum": sum(vs),
+                        "max": max(vs), "min": min(vs),
+                        "avg": sum(vs) / len(vs)}[fn])
+        out[st] = tuple(row)
+    return out
+
+
+def test_groupby_plan_has_operator(weather_db):
+    plan = compile_query(GB_QUERY)
+    gbs = [o for o in walk(plan) if isinstance(o, GroupBy)]
+    assert len(gbs) == 1
+    assert [fn for _, fn, _ in gbs[0].aggs] == ["count", "sum", "max"]
+
+
+@pytest.mark.parametrize("pallas", [False, True])
+def test_groupby_count_sum_max(weather_db, pallas):
+    ex = Executor(weather_db, ExecConfig(use_pallas_join=pallas))
+    rows = ex.run(compile_query(GB_QUERY)).rows()
+    want = expected_groups(weather_db, "TMAX", ("count", "sum", "max"))
+    got = {st: (c, s, m) for st, c, s, m in rows}
+    assert set(got) == set(want)
+    for st in want:
+        np.testing.assert_allclose(got[st], want[st], rtol=1e-5)
+
+
+def test_groupby_avg(weather_db):
+    ex = Executor(weather_db)
+    rows = ex.run(compile_query(AVG_QUERY)).rows()
+    want = expected_groups(weather_db, "PRCP", ("avg",))
+    got = {st: (a,) for st, a in rows}
+    assert set(got) == set(want)
+    for st in want:
+        np.testing.assert_allclose(got[st], want[st], rtol=1e-5)
+
+
+def test_groupby_partition_invariance():
+    from repro.data.weather import WeatherSpec, build_database
+    spec = WeatherSpec(num_stations=6, years=(2000, 2001),
+                       days_per_year=3)
+    results = []
+    for p in (1, 3):
+        db = build_database(spec, num_partitions=p)
+        rows = Executor(db).run(compile_query(GB_QUERY)).rows()
+        results.append(sorted((r[0], round(r[1], 3), round(r[2], 2))
+                              for r in rows))
+    assert results[0] == results[1]

@@ -1,0 +1,92 @@
+"""XDM layer: shredder differential (bulk vs SAX), dictionaries,
+padding, fingerprints."""
+import numpy as np
+import pytest
+
+from repro.core import xdm
+from repro.core.executor import node_fingerprint
+from repro.data.weather import WeatherSpec, build_database
+
+
+def test_bulk_vs_sax_shredders_agree():
+    spec = WeatherSpec(num_stations=6, years=(1999, 2000),
+                       days_per_year=3)
+    fast = build_database(spec, num_partitions=2)
+    sax = build_database(spec, num_partitions=2, sax=True)
+    for cname in fast.collections:
+        cf, cs = fast.collection(cname), sax.collection(cname)
+        for tf, ts in zip(cf.partitions, cs.partitions):
+            assert tf.num_nodes == ts.num_nodes
+            np.testing.assert_array_equal(tf.kind, ts.kind)
+            np.testing.assert_array_equal(tf.name, ts.name)
+            np.testing.assert_array_equal(tf.parent, ts.parent)
+            np.testing.assert_array_equal(tf.field_map, ts.field_map)
+            np.testing.assert_array_equal(tf.text_date, ts.text_date)
+            np.testing.assert_allclose(np.nan_to_num(tf.text_num),
+                                       np.nan_to_num(ts.text_num),
+                                       rtol=1e-6)
+            # sids may differ in interning order but not in meaning
+            for i in range(tf.num_nodes):
+                a, b = int(tf.text_sid[i]), int(ts.text_sid[i])
+                if a >= 0 and b >= 0:
+                    assert fast.strings.str(a) == sax.strings.str(b)
+
+
+def test_string_dict_uppercase_derivation():
+    d = xdm.StringDict()
+    i = d.id("Washington")
+    arrs = d.derived_arrays()
+    u = int(arrs["ucase_sid"][i])
+    assert d.str(u) == "WASHINGTON"
+    # absent lookups use a sentinel that never equals a real sid
+    assert d.lookup("NOPE") == -2
+
+
+def test_derived_numeric_and_date():
+    d = xdm.StringDict()
+    i_num = d.id("123.5")
+    i_date = d.id("1976-07-04T00:00:00.000")
+    i_str = d.id("hello")
+    arrs = d.derived_arrays()
+    assert arrs["num_of_sid"][i_num] == pytest.approx(123.5)
+    assert arrs["date_of_sid"][i_date] == 19760704
+    assert np.isnan(arrs["num_of_sid"][i_str])
+    assert arrs["date_of_sid"][i_str] == -1
+
+
+def test_pad_and_stack():
+    spec = WeatherSpec(num_stations=3, years=(2000,), days_per_year=2)
+    db = build_database(spec, num_partitions=2)
+    t = db.collection("/sensors").padded()
+    assert t.kind.ndim == 2 and t.kind.shape[0] == 2
+    assert t.kind.shape[1] % 128 == 0          # aligned padding
+    # padded rows are inert
+    reals = [p.num_nodes for p in db.collection("/sensors").partitions]
+    for p, n in enumerate(reals):
+        assert (t.kind[p, n:] == -1).all()
+
+
+def test_node_fingerprint_record():
+    spec = WeatherSpec(num_stations=2, years=(2000,), days_per_year=2)
+    db = build_database(spec, num_partitions=1)
+    t = db.collection("/sensors").partitions[0]
+    # first data record starts at row 2 (DOC, dataCollection, data...)
+    fp = node_fingerprint(db, "/sensors", 0, 2)
+    parts = fp.split("|")
+    assert len(parts) == 4                      # date|type|station|value
+    assert parts[0].startswith("20") or parts[0].startswith("19")
+    assert parts[2].startswith("GHCND:")
+
+
+def test_shred_xml_attributes():
+    db = xdm.Database()
+    sh = xdm.Shredder(db.names, db.strings)
+    sh.shred_xml('<a x="1"><b>text</b></a>')
+    t = sh.finish()
+    kinds = list(t.kind)
+    assert kinds.count(xdm.DOCUMENT) == 1
+    assert kinds.count(xdm.ELEMENT) == 2
+    assert kinds.count(xdm.ATTRIBUTE) == 1
+    at = list(t.kind).index(xdm.ATTRIBUTE)
+    assert db.names.str(t.name[at]) == "@x"
+    assert db.strings.str(t.text_sid[at]) == "1"
