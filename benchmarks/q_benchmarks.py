@@ -11,6 +11,11 @@
                      flat normalized time == good scale-up
   ablation         — rewrite/feature ablation: path pushdown off,
                      join strategy, Pallas probe on/off
+  fig5_service     — fig5 queries on the QueryService path: cold
+                     (trace+compile) vs warm (plan-cache hit) latency
+  fig56_service    — warm service latency vs partition count
+  service_ablation — cache-hit-rate / retry-count ablation: presized
+                     vs tiny-cap vs uncapped capacity policies
   ingest           — SAX parse (the paper's measured bottleneck) vs
                      vectorized bulk shred
 """
@@ -19,7 +24,8 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import row, timeit
-from repro.core import ExecConfig, Executor, compile_query
+from repro.core import (ExecConfig, Executor, QueryOverflowError,
+                        QueryService, compile_query)
 from repro.core.baselines import MrqlLike, SaxonLike
 from repro.core.queries import ALL, SCALAR
 from repro.data import weather
@@ -30,9 +36,19 @@ BENCH_SPEC = WeatherSpec(num_stations=30,
                          days_per_year=6)
 
 
-def _run_rows(ex: Executor, plan) -> int:
-    rs = ex.run(plan)
-    return len(rs.rows()) if not rs.overflow else -1
+def _guarded_compile(ex: Executor, plan):
+    """Compile once; run that compilation once as overflow guard and
+    warmup. A truncated (overflowed) result must never be recorded as
+    if it were a measurement — raise instead; runs that want automatic
+    recovery go through QueryService."""
+    cp = ex.compile(plan)
+    rs = ex.run_compiled(cp)
+    if rs.overflow:
+        raise QueryOverflowError(
+            "benchmark run overflowed its capacity "
+            f"(scan={rs.overflow_scan}, join={rs.overflow_join}); "
+            "raise ExecConfig caps or use the QueryService path")
+    return cp
 
 
 def fig5_vs_saxon(queries=("Q1", "Q2", "Q3", "Q4", "Q5")) -> None:
@@ -41,7 +57,7 @@ def fig5_vs_saxon(queries=("Q1", "Q2", "Q3", "Q4", "Q5")) -> None:
     sx = SaxonLike(db)
     for name in queries:
         plan = compile_query(ALL[name])
-        cp = ex.compile(plan)
+        cp = _guarded_compile(ex, plan)
         t_vx = timeit(lambda: cp.fn(ex.tables))
         t_sx = timeit(lambda: sx.run(ALL[name]), warmup=0, iters=1)
         row("fig5_vs_saxon", name, "vxquery_s", t_vx)
@@ -56,7 +72,7 @@ def fig10_vs_mrql(queries=("Q1", "Q3", "Q4", "Q5", "Q8")) -> None:
     mr = MrqlLike(db)
     for name in queries:
         plan = compile_query(ALL[name])
-        cp = ex.compile(plan)
+        cp = _guarded_compile(ex, plan)
         t_vx = timeit(lambda: cp.fn(ex.tables))
         t_mr = timeit(lambda: mr.run(plan), warmup=1, iters=3)
         row("fig10_vs_mrql", name, "vxquery_s", t_vx)
@@ -71,7 +87,7 @@ def fig56_speedup(queries=("Q2", "Q4"), parts=(1, 2, 4, 8)) -> None:
         for p in parts:
             db = build_database(BENCH_SPEC, num_partitions=p)
             ex = Executor(db)
-            cp = ex.compile(plan)
+            cp = _guarded_compile(ex, plan)
             t = timeit(lambda: cp.fn(ex.tables))
             row("fig56_speedup", f"{name}/p{p}", "wall_s", t,
                 "1-core box: wall ~flat; see dryrun for scaling")
@@ -87,7 +103,7 @@ def fig89_scaleup(queries=("Q2", "Q4"), parts=(1, 2, 4, 8)) -> None:
                                days_per_year=4)
             db = build_database(spec, num_partitions=p)
             ex = Executor(db)
-            cp = ex.compile(plan)
+            cp = _guarded_compile(ex, plan)
             t = timeit(lambda: cp.fn(ex.tables))
             row("fig89_scaleup", f"{name}/p{p}", "wall_s_per_part",
                 t / p, "flat == perfect scale-up (1-core sim)")
@@ -110,7 +126,7 @@ def ablation() -> None:
     ex = Executor(db)
     for tag, plan in [("full_rewrites", full),
                       ("no_path_pushdown", partial)]:
-        cp = ex.compile(plan)
+        cp = _guarded_compile(ex, plan)
         t = timeit(lambda: cp.fn(ex.tables))
         row("ablation", f"Q2/{tag}", "wall_s", t)
     # (b) join strategy + Pallas probe
@@ -120,9 +136,68 @@ def ablation() -> None:
                        {"join_strategy": "repartition"}),
                       ("join_pallas_probe", {"use_pallas_join": True})]:
         exj = Executor(db, ExecConfig(**cfgk))
-        cp = exj.compile(plan8)
+        cp = _guarded_compile(exj, plan8)
         t = timeit(lambda: cp.fn(exj.tables))
         row("ablation", f"Q8/{tag}", "wall_s", t)
+
+
+def fig5_service(queries=("Q1", "Q2", "Q3", "Q4", "Q5")) -> None:
+    """fig5 queries through the QueryService: cold latency pays
+    trace+compile once, warm latency is a plan-cache hit — the
+    amortization that makes high-QPS serving plausible."""
+    db = build_database(BENCH_SPEC, num_partitions=4)
+    svc = QueryService(db)
+    for name in queries:
+        t_cold = timeit(lambda: svc.execute(ALL[name]),
+                        warmup=0, iters=1)
+        t_warm = timeit(lambda: svc.execute(ALL[name]))
+        row("fig5_service", name, "cold_s", t_cold)
+        row("fig5_service", name, "warm_s", t_warm)
+        row("fig5_service", name, "compile_amortization",
+            t_cold / t_warm, "cold/warm — cache payoff per repeat")
+    row("fig5_service", "all", "cache_hit_rate", svc.stats.hit_rate)
+    row("fig5_service", "all", "retry_count", svc.stats.retries,
+        "presized caps: expect 0")
+
+
+def fig56_service(queries=("Q2", "Q4"), parts=(1, 2, 4, 8)) -> None:
+    """Warm (plan-cached) service latency vs partition count — the
+    fig56 sweep as a served workload rather than a compile benchmark."""
+    for name in queries:
+        for p in parts:
+            db = build_database(BENCH_SPEC, num_partitions=p)
+            svc = QueryService(db)
+            svc.execute(ALL[name])          # cold run warms the cache
+            t = timeit(lambda: svc.execute(ALL[name]))
+            row("fig56_service", f"{name}/p{p}", "warm_wall_s", t,
+                "plan-cache path; 1-core box")
+
+
+def service_ablation() -> None:
+    """Capacity-policy ablation over the eight-query workload run
+    twice: presized (statistics) vs tiny seed caps (regrowth pays a
+    few extra compiles, then caches) vs uncapped (padded tables, no
+    retries, maximum padded compute)."""
+    db = build_database(BENCH_SPEC, num_partitions=4)
+    variants = [
+        ("presized", dict()),
+        ("tiny_caps", dict(config=ExecConfig(scan_cap=4, join_bucket=1),
+                           presize=False)),
+        ("uncapped", dict(config=ExecConfig(), presize=False)),
+    ]
+    for tag, kw in variants:
+        svc = QueryService(db, **kw)
+        for _ in range(2):
+            for name in ALL:
+                svc.execute(ALL[name])
+        row("service_ablation", tag, "cache_hit_rate",
+            svc.stats.hit_rate)
+        row("service_ablation", tag, "retry_count", svc.stats.retries)
+        row("service_ablation", tag, "compiles", svc.stats.compiles)
+        caps = sorted({c.scan_cap for c in svc.cached_configs()},
+                      key=lambda c: (c is None, c))
+        row("service_ablation", tag, "distinct_scan_caps", len(caps),
+            f"final={caps[-1] if caps else None}")
 
 
 def ingest() -> None:

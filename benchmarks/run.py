@@ -37,6 +37,13 @@ def main() -> None:
             ("Q4",) if args.quick else ("Q2", "Q4"),
             (1, 4) if args.quick else (1, 2, 4, 8)),
         "ablation": q_benchmarks.ablation,
+        "fig5_service": lambda: q_benchmarks.fig5_service(
+            ("Q1", "Q4") if args.quick else
+            ("Q1", "Q2", "Q3", "Q4", "Q5")),
+        "fig56_service": lambda: q_benchmarks.fig56_service(
+            ("Q4",) if args.quick else ("Q2", "Q4"),
+            (1, 4) if args.quick else (1, 2, 4, 8)),
+        "service_ablation": q_benchmarks.service_ablation,
         "ingest": q_benchmarks.ingest,
         "lm_train": lm_benchmarks.train_step_smoke,
         "lm_attention": lm_benchmarks.attention_impls,

@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Tier-1 CI loop: the ROADMAP verify command plus timing report.
+#
+#   scripts/ci.sh              default loop (slow-marked smokes skipped)
+#   FULL=1 scripts/ci.sh       include slow-marked arch smoke tests
+#   scripts/ci.sh tests/...    any extra pytest args pass through
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+MARK=()
+if [ "${FULL:-0}" = "1" ]; then
+    MARK=(-m "slow or not slow")
+fi
+# ${MARK[@]+...} keeps set -u happy on bash < 4.4 when MARK is empty
+exec python -m pytest -x -q --durations=10 \
+    ${MARK[@]+"${MARK[@]}"} "$@"

@@ -1,0 +1,80 @@
+"""JAX version compatibility shim.
+
+The codebase targets the modern mesh/collective API surface
+(``jax.make_mesh(..., axis_types=...)``, ``jax.sharding.AxisType``,
+``lax.axis_size``); the installed JAX may predate any of it.  All
+version-sensitive call sites route through this module so the rest of
+the code can stay on one idiom:
+
+  axis_size(axis)            lax.axis_size, else psum(1, axis) — JAX
+                             constant-folds a unit psum to the static
+                             axis size under both vmap and shard_map
+  make_mesh(shape, names)    jax.make_mesh, dropping axis_types when
+                             the installed signature lacks it
+  make_abstract_mesh(...)    AbstractMesh across both constructor
+                             generations (separate shape/names args vs
+                             a single ((name, size), ...) pair tuple)
+  AxisType / auto_axis_types sharding.AxisType when present, else None
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+from jax import lax
+from jax.sharding import AbstractMesh, Mesh
+
+AxisType = getattr(jax.sharding, "AxisType", None)
+
+_MAKE_MESH = getattr(jax, "make_mesh", None)
+_MAKE_MESH_AXIS_TYPES = (
+    _MAKE_MESH is not None
+    and "axis_types" in inspect.signature(_MAKE_MESH).parameters)
+
+
+def auto_axis_types(n: int):
+    """(AxisType.Auto,) * n where AxisType exists, else None."""
+    if AxisType is None:
+        return None
+    return (AxisType.Auto,) * n
+
+
+def make_mesh(shape: Sequence[int], axis_names: Sequence[str], *,
+              devices=None) -> Mesh:
+    """jax.make_mesh with Auto axis types when supported; on JAX old
+    enough to predate jax.make_mesh entirely, a direct Mesh over the
+    (local) devices reshaped to ``shape``."""
+    shape = tuple(shape)
+    axis_names = tuple(axis_names)
+    if _MAKE_MESH is None:
+        devs = list(devices) if devices is not None else jax.devices()
+        n = int(np.prod(shape))
+        return Mesh(np.asarray(devs[:n]).reshape(shape), axis_names)
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if _MAKE_MESH_AXIS_TYPES and AxisType is not None:
+        kwargs["axis_types"] = auto_axis_types(len(axis_names))
+    return _MAKE_MESH(shape, axis_names, **kwargs)
+
+
+def make_abstract_mesh(shape: Sequence[int],
+                       axis_names: Sequence[str]) -> AbstractMesh:
+    """Device-free mesh for spec computation, both API generations."""
+    shape = tuple(shape)
+    axis_names = tuple(axis_names)
+    try:
+        return AbstractMesh(shape, axis_names)
+    except TypeError:
+        return AbstractMesh(tuple(zip(axis_names, shape)))
+
+
+def axis_size(axis: Optional[str]):
+    """Static size of a named mapped axis (1 when axis is None)."""
+    if axis is None:
+        return 1
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(axis)
+    return lax.psum(1, axis)

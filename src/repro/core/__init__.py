@@ -7,6 +7,8 @@ JAX over the mesh ``data`` axis). See DESIGN.md.
 from repro.core import algebra, xdm  # noqa: F401
 from repro.core.executor import ExecConfig, Executor, ResultSet  # noqa: F401
 from repro.core.rewrite import optimize  # noqa: F401
+from repro.core.service import (QueryOverflowError, QueryService,  # noqa: F401
+                                ServiceStats)
 from repro.core.translator import translate  # noqa: F401
 
 

@@ -26,7 +26,8 @@ import numpy as np
 
 from repro.core import algebra as A
 from repro.core import xdm
-from repro.core.executor import Comm, ExecConfig, Executor, node_fingerprint
+from repro.core.executor import (Comm, EvalCtx, ExecConfig, Executor,
+                                 node_fingerprint)
 from repro.core.physical import ExprEval, Tile
 
 
@@ -66,7 +67,8 @@ class MrqlLike:
         """Evaluate a local operator chain eagerly; materialize tile +
         join keys to host (the shuffle write)."""
         ev = ExprEval(self.db, self._tables_at(part))
-        tile = self.ex._eval(op, ev, self.local_comm, None, self.config)
+        tile = self.ex._eval(op, ev, self.local_comm, None,
+                             EvalCtx(self.config))
         cols = {}
         for v, c in tile.cols.items():
             if c.kind in ("node", "atom"):
@@ -187,7 +189,7 @@ class MrqlLike:
         for part in range(p):                     # map job: local agg
             ev = ExprEval(self.db, self._tables_at(part))
             tile = self.ex._eval(agg.child, ev, self.local_comm, None,
-                                 self.config)
+                                 EvalCtx(self.config))
             overflow |= bool(np.asarray(tile.overflow))
             valid = np.asarray(tile.valid)
             if fn == "count":

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro import compat
 from repro.core import algebra as A
 from repro.core import xdm
 from repro.core.physical import (Col, ExprEval, Tile, _gather,
@@ -42,6 +43,24 @@ class ExecConfig:
     join_strategy: str = "broadcast"      # broadcast | repartition
     join_bucket: int = 4                  # hash-bucket probe width
     use_pallas_join: bool = False         # route probe through kernels/
+
+    def cap_key(self) -> tuple:
+        """The fields that change compiled shapes/semantics — the
+        plan-cache key component (service.py)."""
+        return (self.scan_cap, self.join_cap, self.join_strategy,
+                self.join_bucket, self.use_pallas_join)
+
+
+@dataclasses.dataclass
+class EvalCtx:
+    """Per-trace evaluation context: the active config plus per-stage
+    overflow accumulators. Scan-cap overflow (DATASCAN/UNNEST fixed
+    capacity) and join-bucket overflow (probe width) are surfaced as
+    separate output flags so an adaptive layer can regrow exactly the
+    capacity that saturated instead of inflating everything."""
+    cfg: ExecConfig
+    scan_ovf: list = dataclasses.field(default_factory=list)
+    join_ovf: list = dataclasses.field(default_factory=list)
 
 
 class Comm:
@@ -77,7 +96,7 @@ class Comm:
     def size(self) -> int:
         if not self.axis:
             return 1
-        return lax.axis_size(self.axis)
+        return compat.axis_size(self.axis)
 
 
 # ---------------------------------------------------------------------------
@@ -181,6 +200,12 @@ class Executor:
         parts = {len(c.partitions) for c in db.collections.values()}
         assert len(parts) == 1, "collections must agree on partitioning"
         self.num_partitions = parts.pop()
+        # observability for the service layer's cache assertions
+        self.compile_count = 0      # Executor.compile invocations
+        self.trace_count = 0        # actual local-fn traces (retraces)
+        # set once a donated run consumes self.tables (they are shared
+        # by every compiled variant, so donation spends the executor)
+        self._tables_donated = False
 
     # -- table plumbing ----------------------------------------------------
 
@@ -198,24 +223,36 @@ class Executor:
     # -- plan compilation ----------------------------------------------------
 
     def compile(self, plan: A.Op, mode: str = "sim", mesh=None,
-                axis: str = "data", donate: bool = False
-                ) -> "CompiledPlan":
+                axis: str = "data", donate: bool = False,
+                config: Optional[ExecConfig] = None) -> "CompiledPlan":
         """Returns a CompiledPlan whose fn maps tables -> raw arrays
         (stacked over partitions); static column schema is captured at
-        trace time (strings can't flow through vmap/shard_map)."""
-        cfg = self.config
+        trace time (strings can't flow through vmap/shard_map).
+
+        ``config`` overrides the executor's default ExecConfig for this
+        compilation only — the service layer uses this to recompile the
+        same plan with grown capacities without rebuilding the executor
+        (device tables are shared across all compiled variants).
+        ``donate=True`` donates the table buffers to the call (one-shot
+        runs only; a donated CompiledPlan must not be reused)."""
+        cfg = config or self.config
+        self.compile_count += 1
         schema: dict[int, tuple] = {}
+        jit = partial(jax.jit, donate_argnums=(0,)) if donate else jax.jit
 
         def local(tables):
+            self.trace_count += 1
             ev = ExprEval(self.db, tables)
             comm = Comm(axis)
-            tile = self._eval(plan, ev, comm, None, cfg)
-            return self._outputs(plan, tile, ev, schema)
+            ctx = EvalCtx(cfg)
+            tile = self._eval(plan, ev, comm, None, ctx)
+            return self._outputs(plan, tile, ev, schema, ctx)
 
         if mode == "sim":
             fn = jax.vmap(local, in_axes=(self._table_slice_axes(),),
                           axis_name=axis)
-            return CompiledPlan(jax.jit(fn), schema, plan)
+            return CompiledPlan(jit(fn), schema, plan, cfg, mode,
+                                donated=donate)
         if mode == "spmd":
             from jax.sharding import PartitionSpec as P
             from jax.experimental.shard_map import shard_map
@@ -236,13 +273,35 @@ class Executor:
 
             sm = shard_map(local_spmd, mesh=mesh, in_specs=in_specs,
                            out_specs=P(axis), check_rep=False)
-            return CompiledPlan(jax.jit(sm), schema, plan)
+            return CompiledPlan(jit(sm), schema, plan, cfg, mode,
+                                donated=donate)
         raise ValueError(mode)
 
-    def run(self, plan: A.Op, mode: str = "sim", mesh=None) -> "ResultSet":
-        cp = self.compile(plan, mode=mode, mesh=mesh)
-        raw = jax.device_get(cp.fn(self.tables))
-        return ResultSet(self.db, plan, raw, cp.schema)
+    def run(self, plan: A.Op, mode: str = "sim", mesh=None,
+            config: Optional[ExecConfig] = None) -> "ResultSet":
+        cp = self.compile(plan, mode=mode, mesh=mesh, config=config)
+        return self.run_compiled(cp)
+
+    def run_compiled(self, cp: "CompiledPlan") -> "ResultSet":
+        """Execute an already-compiled plan against the bound tables."""
+        if self._tables_donated:
+            raise RuntimeError(
+                "this executor's table buffers were donated to an "
+                "earlier run; build a new Executor to keep querying")
+        if cp.donated and cp.spent:
+            raise RuntimeError(
+                "donated CompiledPlan already executed once; its "
+                "table buffers were donated to that call — "
+                "recompile without donate for reuse")
+        out = cp.fn(self.tables)
+        # a trace/compile error above consumed nothing (executor stays
+        # usable); once dispatch returned, buffers are donated even if
+        # the fetch below fails — flip the flags in between
+        if cp.donated:
+            cp.spent = True
+            self._tables_donated = True
+        raw = jax.device_get(out)
+        return ResultSet(self.db, cp.plan, raw, cp.schema)
 
     # -- recursive evaluation -------------------------------------------------
 
@@ -251,63 +310,68 @@ class Executor:
                     overflow=jnp.zeros((), jnp.bool_))
 
     def _eval(self, op: A.Op, ev: ExprEval, comm: Comm,
-              nts_input: Optional[Tile], cfg: ExecConfig) -> Tile:
+              nts_input: Optional[Tile], ctx: EvalCtx) -> Tile:
         if isinstance(op, A.EmptyTupleSource):
             return self._trivial_tile()
         if isinstance(op, A.NestedTupleSource):
             return nts_input if nts_input is not None \
                 else self._trivial_tile()
         if isinstance(op, A.DataScan):
-            below = self._eval(op.child, ev, comm, nts_input, cfg)
+            below = self._eval(op.child, ev, comm, nts_input, ctx)
             if below.cols:
                 raise PlanError("DATASCAN over non-trivial input "
                                 "(correlated scan not supported)")
-            tab = ev.tables[op.collection]
+            tab = ev.tables.get(op.collection)
+            if tab is None:
+                known = sorted(k for k in ev.tables if k != "__derived__")
+                raise PlanError(f"unknown collection {op.collection!r}; "
+                                f"known: {known}")
             mask = path_match_mask(tab, self.db.names, op.path)
-            cap = cfg.scan_cap or tab["kind"].shape[0]
+            cap = ctx.cfg.scan_cap or tab["kind"].shape[0]
             idx, valid, ovf = rows_from_mask(mask, cap)
+            ctx.scan_ovf.append(ovf)
             return Tile(cols={op.var: Col("node", idx, op.collection)},
                         valid=valid, overflow=below.overflow | ovf)
         if isinstance(op, A.Assign):
-            t = self._eval(op.child, ev, comm, nts_input, cfg)
+            t = self._eval(op.child, ev, comm, nts_input, ctx)
             t.cols[op.var] = ev.eval(op.expr, t.cols)
             return t
         if isinstance(op, A.Select):
-            t = self._eval(op.child, ev, comm, nts_input, cfg)
+            t = self._eval(op.child, ev, comm, nts_input, ctx)
             b = ev.eval(op.expr, t.cols)
             return Tile(t.cols, t.valid & b.data, t.overflow)
         if isinstance(op, A.Unnest):
-            return self._eval_unnest(op, ev, comm, nts_input, cfg)
+            return self._eval_unnest(op, ev, comm, nts_input, ctx)
         if isinstance(op, A.Subplan):
-            outer = self._eval(op.child, ev, comm, nts_input, cfg)
+            outer = self._eval(op.child, ev, comm, nts_input, ctx)
             if not isinstance(op.plan, A.Aggregate):
                 raise PlanError("SUBPLAN must have been rewritten to an "
                                 "aggregate (run the optimizer first)")
-            return self._eval_aggregate(op.plan, ev, comm, outer, cfg)
+            return self._eval_aggregate(op.plan, ev, comm, outer, ctx)
         if isinstance(op, A.Join):
-            return self._eval_join(op, ev, comm, nts_input, cfg)
+            return self._eval_join(op, ev, comm, nts_input, ctx)
         if isinstance(op, A.GroupBy):
-            return self._eval_group_by(op, ev, comm, nts_input, cfg)
+            return self._eval_group_by(op, ev, comm, nts_input, ctx)
         if isinstance(op, A.DistributeResult):
-            return self._eval(op.child, ev, comm, nts_input, cfg)
+            return self._eval(op.child, ev, comm, nts_input, ctx)
         raise PlanError(f"cannot execute {type(op).__name__}")
 
     def _eval_group_by(self, op: "A.GroupBy", ev, comm, nts_input,
-                       cfg) -> Tile:
+                       ctx: EvalCtx) -> Tile:
         """Keyed two-step aggregation (XQuery 3.0 group-by, the
         paper's §6 future work): grouping keys are dictionary-encoded
         strings, so the segment space is the string dictionary; the
         local step is a segmented reduce (the seg_aggregate Pallas
         kernel's job), the global step psums the [S] partials — rule
         4.2.2 generalized from scalar to keyed form."""
-        t = self._eval(op.child, ev, comm, nts_input, cfg)
+        t = self._eval(op.child, ev, comm, nts_input, ctx)
         key = ev.eval(op.key_expr, t.cols)
         sid = ev.atom_sid(key)
         nseg = len(self.db.strings)
         valid = t.valid & (sid >= 0)
 
         def seg_sum_count(vals):
-            if cfg.use_pallas_join:      # reuse the kernel toggle
+            if ctx.cfg.use_pallas_join:  # reuse the kernel toggle
                 from repro.kernels import ops as kops
                 n = vals.shape[0]
                 bn = n
@@ -354,18 +418,20 @@ class Executor:
         out_valid = (g_counts > 0) & central
         return Tile(cols, out_valid, t.overflow)
 
-    def _eval_unnest(self, op: A.Unnest, ev, comm, nts_input, cfg) -> Tile:
-        t = self._eval(op.child, ev, comm, nts_input, cfg)
+    def _eval_unnest(self, op: A.Unnest, ev, comm, nts_input,
+                     ctx: EvalCtx) -> Tile:
+        t = self._eval(op.child, ev, comm, nts_input, ctx)
         e = op.expr
         if isinstance(e, A.Call) and e.fn == "iterate":
             # singleton iterate == pass-through alias
             t.cols[op.var] = ev.eval(e.args[0], t.cols)
             return t
         if isinstance(e, A.Call) and e.fn == "child":
-            return self._unnest_child(t, op.var, e, ev, cfg)
+            return self._unnest_child(t, op.var, e, ev, ctx)
         raise PlanError(f"unnest expr {e}")
 
-    def _unnest_child(self, t: Tile, var: int, e: A.Expr, ev, cfg) -> Tile:
+    def _unnest_child(self, t: Tile, var: int, e: A.Expr, ev,
+                      ctx: EvalCtx) -> Tile:
         """UNNEST child-chain: expand matching descendants, re-gather
         the other columns from each row's ancestor context tuple."""
         from repro.core.rewrite.parallel_rules import _child_chain
@@ -389,8 +455,9 @@ class Executor:
             f = self.db.names.lookup(nm)
             up = _gather(frontier, parent, False)
             frontier = up & (name_arr == (f if f >= 0 else -99))
-        cap = cfg.scan_cap or n
+        cap = ctx.cfg.scan_cap or n
         idx, valid, ovf = rows_from_mask(frontier, cap)
+        ctx.scan_ovf.append(ovf)
         anc = idx
         for _ in names:
             anc = _gather(parent, anc, -1)
@@ -413,8 +480,8 @@ class Executor:
     # -- aggregation -----------------------------------------------------------
 
     def _eval_aggregate(self, agg: A.Aggregate, ev, comm,
-                        outer: Tile, cfg) -> Tile:
-        inner = self._eval(agg.child, ev, comm, outer, cfg)
+                        outer: Tile, ctx: EvalCtx) -> Tile:
+        inner = self._eval(agg.child, ev, comm, outer, ctx)
         expr = agg.expr
         assert isinstance(expr, A.Call)
         fn = expr.fn
@@ -450,11 +517,13 @@ class Executor:
 
     # -- join --------------------------------------------------------------------
 
-    def _eval_join(self, op: A.Join, ev, comm, nts_input, cfg) -> Tile:
+    def _eval_join(self, op: A.Join, ev, comm, nts_input,
+                   ctx: EvalCtx) -> Tile:
         if not op.hash_keys:
             raise PlanError("non-equi JOIN not supported (no hash keys)")
-        left = self._eval(op.left, ev, comm, nts_input, cfg)
-        right = self._eval(op.right, ev, comm, nts_input, cfg)
+        cfg = ctx.cfg
+        left = self._eval(op.left, ev, comm, nts_input, ctx)
+        right = self._eval(op.right, ev, comm, nts_input, ctx)
 
         def key_arr(col: Col) -> jnp.ndarray:
             # string-dictionary id when present, else packed date,
@@ -502,6 +571,7 @@ class Executor:
         pos, matched, bovf = hash_join_probe(
             bkeys, bvalid, pkeys, pvalid, cfg.join_bucket,
             use_pallas=cfg.use_pallas_join)
+        ctx.join_ovf.append(bovf)
 
         def attach(c: Col) -> Col:
             if c.kind in ("det", "xnode"):
@@ -522,12 +592,21 @@ class Executor:
     # -- outputs --------------------------------------------------------------
 
     def _outputs(self, plan: A.Op, tile: Tile, ev: ExprEval,
-                 schema: dict[int, tuple]) -> dict:
+                 schema: dict[int, tuple], ctx: EvalCtx) -> dict:
         """Traced arrays only; static (kind, table) goes to ``schema``
         captured at trace time."""
         assert isinstance(plan, A.DistributeResult)
+
+        def or_all(flags):
+            acc = jnp.zeros((), jnp.bool_)
+            for f in flags:
+                acc = acc | f
+            return acc
+
         out: dict[str, Any] = {"valid": tile.valid,
-                               "overflow": tile.overflow}
+                               "overflow": tile.overflow,
+                               "overflow_scan": or_all(ctx.scan_ovf),
+                               "overflow_join": or_all(ctx.join_ovf)}
         for v in plan.vars:
             c = tile.cols[v]
             if c.kind == "node":
@@ -555,6 +634,10 @@ class CompiledPlan:
     fn: Callable
     schema: dict[int, tuple]
     plan: A.Op
+    config: Optional[ExecConfig] = None   # caps this fn was traced with
+    mode: str = "sim"
+    donated: bool = False                 # one-shot: tables die with run 1
+    spent: bool = dataclasses.field(default=False, repr=False)
 
 
 class ResultSet:
@@ -569,6 +652,9 @@ class ResultSet:
         self.raw = raw
         self.schema = schema
         self.overflow = bool(np.any(raw["overflow"]))
+        # per-stage flags (absent in pre-refactor raw dicts)
+        self.overflow_scan = bool(np.any(raw.get("overflow_scan", False)))
+        self.overflow_join = bool(np.any(raw.get("overflow_join", False)))
 
     def rows(self) -> list[tuple]:
         assert isinstance(self.plan, A.DistributeResult)

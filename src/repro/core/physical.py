@@ -351,6 +351,29 @@ def path_match_mask(tab: dict, names: xdm.NameDict,
     return frontier
 
 
+def round_cap(n: int, multiple: int = 16) -> int:
+    """Round a capacity up to an alignment multiple. Bucketing caps
+    keeps the number of distinct compiled shapes (and therefore plan-
+    cache entries) small as estimates drift."""
+    n = max(int(n), multiple)
+    return ((n + multiple - 1) // multiple) * multiple
+
+
+def estimate_scan_cap(db: xdm.Database, collection: str,
+                      steps: tuple[str, ...]) -> Optional[int]:
+    """Statistics-based per-partition capacity for a DATASCAN/UNNEST of
+    ``/step1/step2/...`` over ``collection``: the build-time per-tag
+    count is an exact upper bound for child-path matches (every match
+    is a node with the path's final tag). None when no stats exist."""
+    stats = getattr(db, "stats", {}).get(collection)
+    if stats is None:
+        return None
+    bound = stats.path_match_bound(db.names, tuple(steps))
+    if bound is None:
+        return None
+    return round_cap(bound)
+
+
 def rows_from_mask(mask: jnp.ndarray, cap: int
                    ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """mask [N] -> (idx [cap], valid [cap], overflow). Row order is

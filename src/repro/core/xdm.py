@@ -33,7 +33,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import re
-from typing import Any, Iterable
+from typing import Any, Iterable, Optional
 
 import numpy as np
 
@@ -116,6 +116,17 @@ class NodeTable:
     @property
     def num_nodes(self) -> int:
         return int(self.kind.shape[0])
+
+    def tag_counts(self) -> dict[int, int]:
+        """Node count per element/attribute name id — the per-tag
+        statistics cap pre-sizing keys on (a path /a/b/c can match at
+        most count(name == c) rows)."""
+        named = (self.kind == ELEMENT) | (self.kind == ATTRIBUTE)
+        ids = self.name[named & (self.name >= 0)]
+        if ids.size == 0:
+            return {}
+        counts = np.bincount(ids)
+        return {int(i): int(c) for i, c in enumerate(counts) if c > 0}
 
     def pad_to(self, n: int) -> "NodeTable":
         cur = self.num_nodes
@@ -267,6 +278,39 @@ class NameDict(StringDict):
 
 
 @dataclasses.dataclass
+class CollectionStats:
+    """Build-time statistics for one collection: the executor runs one
+    local function per partition, so caps are *per-partition* — every
+    figure here is a max over partitions."""
+    max_nodes: int                  # largest unpadded partition
+    tag_max: dict[int, int]         # name id -> max per-partition count
+
+    def path_match_bound(self, names: "NameDict",
+                         steps: tuple[str, ...]) -> Optional[int]:
+        """Upper bound on per-partition matches of a child path ending
+        in ``steps[-1]``. A tag absent from the (shared, append-only)
+        name dictionary — or never seen in this collection — matches
+        nothing, so 0 is exact there; an empty path means the whole
+        table."""
+        if not steps:
+            return self.max_nodes
+        f = names.lookup(steps[-1])
+        if f < 0:
+            return 0
+        return self.tag_max.get(f, 0)
+
+
+def collection_stats(partitions: list["NodeTable"]) -> CollectionStats:
+    tag_max: dict[int, int] = {}
+    for t in partitions:
+        for f, c in t.tag_counts().items():
+            tag_max[f] = max(tag_max.get(f, 0), c)
+    return CollectionStats(
+        max_nodes=max(t.num_nodes for t in partitions),
+        tag_max=tag_max)
+
+
+@dataclasses.dataclass
 class Collection:
     """A partitioned collection: list of NodeTables, one per partition.
 
@@ -315,9 +359,13 @@ class Database:
         self.names = NameDict()
         self.strings = StringDict()
         self.collections: dict[str, Collection] = {}
+        self.stats: dict[str, CollectionStats] = {}
 
     def add_collection(self, name: str, tables: list[NodeTable]) -> None:
         self.collections[name] = Collection(name, tables)
+        # statistics are gathered once at build time; the query service
+        # pre-sizes capacities from them (first-shot caps close to right)
+        self.stats[name] = collection_stats(tables)
 
     def collection(self, name: str) -> Collection:
         if name not in self.collections:

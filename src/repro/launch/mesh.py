@@ -29,21 +29,20 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.models.model import ModelConfig
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_host_mesh(num_devices: Optional[int] = None) -> Mesh:
     """Small mesh over the actual local devices (tests/examples)."""
     n = num_devices or len(jax.devices())
-    return jax.make_mesh((n, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat.make_mesh((n, 1), ("data", "model"))
 
 
 def _axis_size(mesh: Mesh, name) -> int:

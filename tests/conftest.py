@@ -10,12 +10,32 @@ import pytest
 from repro.data.weather import WeatherSpec, build_database
 
 
+def canon(rows):
+    return sorted(map(str, rows))
+
+
 @pytest.fixture(scope="session")
 def weather_db():
     spec = WeatherSpec(num_stations=8,
                        years=(1976, 1999, 2000, 2001, 2003, 2004),
                        days_per_year=3)
     return build_database(spec, num_partitions=4)
+
+
+@pytest.fixture(scope="session")
+def oracle(weather_db):
+    """SaxonLike tree-walker results for all eight paper queries —
+    the differential-testing ground truth, computed once per session."""
+    from repro.core.baselines import SaxonLike
+    from repro.core.queries import ALL, SCALAR
+    sx = SaxonLike(weather_db)
+    out = {}
+    for name, q in ALL.items():
+        if name in SCALAR:
+            out[name] = sx.run(q)[0]
+        else:
+            out[name] = canon(sx.run_rows(q))
+    return out
 
 
 @pytest.fixture(scope="session")

@@ -3,26 +3,11 @@ strategies, jnp + Pallas probes) vs the MRQL-style staged baseline vs
 the Saxon-style tree walker (§5.2)."""
 import numpy as np
 import pytest
+from conftest import canon
 
 from repro.core import ExecConfig, Executor, compile_query
 from repro.core.baselines import MrqlLike, SaxonLike
 from repro.core.queries import ALL, SCALAR
-
-
-def canon(rows):
-    return sorted(map(str, rows))
-
-
-@pytest.fixture(scope="module")
-def oracle(weather_db):
-    sx = SaxonLike(weather_db)
-    out = {}
-    for name, q in ALL.items():
-        if name in SCALAR:
-            out[name] = sx.run(q)[0]
-        else:
-            out[name] = canon(sx.run_rows(q))
-    return out
 
 
 @pytest.mark.parametrize("name", list(ALL))
@@ -36,10 +21,13 @@ def test_executor_broadcast(weather_db, oracle, name):
         assert canon(rs.rows()) == oracle[name]
 
 
-@pytest.mark.parametrize("name", ["Q5", "Q6", "Q7", "Q8"])
+@pytest.mark.parametrize("name", list(ALL))
 def test_executor_repartition(weather_db, oracle, name):
+    """Repartition-vs-broadcast parity across all eight paper queries
+    (join-free plans must be unaffected by the strategy flag)."""
     ex = Executor(weather_db, ExecConfig(join_strategy="repartition"))
     rs = ex.run(compile_query(ALL[name]))
+    assert not rs.overflow
     if name in SCALAR:
         assert rs.scalar() == pytest.approx(oracle[name], rel=1e-3)
     else:
@@ -104,9 +92,8 @@ def test_scan_capacity_overflow_flag(weather_db):
 def test_spmd_single_device(weather_db_small):
     """shard_map path on a 1-device mesh (the 8-device version lives in
     test_distributed.py)."""
-    import jax
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro import compat
+    mesh = compat.make_mesh((1,), ("data",))
     from repro.data.weather import WeatherSpec, build_database
     db1 = build_database(WeatherSpec(num_stations=5, years=(1976, 2000),
                                      days_per_year=2), num_partitions=1)

@@ -1,0 +1,124 @@
+"""QueryService: compiled-plan cache, overflow-driven capacity
+regrowth, statistics-based cap pre-sizing (the adaptive layer that
+keeps results exact while caps stay tight)."""
+import pytest
+from conftest import canon
+
+from repro.core import (ExecConfig, Executor, QueryOverflowError,
+                        QueryService, compile_query)
+from repro.core import algebra as A
+from repro.core.queries import ALL, SCALAR
+
+
+def check(rs, oracle, name):
+    assert not rs.overflow
+    if name in SCALAR:
+        assert rs.scalar() == pytest.approx(oracle[name], rel=1e-3)
+    else:
+        assert canon(rs.rows()) == oracle[name]
+
+
+def true_scan_size(db, plan) -> int:
+    """Largest per-partition scan cardinality in the plan (the per-tag
+    build-time counts are exact for these child paths)."""
+    return max(db.stats[op.collection].path_match_bound(db.names, op.path)
+               for op in A.walk(plan) if isinstance(op, A.DataScan))
+
+
+@pytest.mark.parametrize("name", list(ALL))
+def test_tiny_caps_regrow_to_exact(weather_db, oracle, name):
+    """Seeded with a scan cap 1/10th of the true result size (and a
+    width-1 join bucket), the service must regrow to an exact result —
+    and serve the repeat from the plan cache without recompiling."""
+    plan = compile_query(ALL[name])
+    tiny = max(1, true_scan_size(weather_db, plan) // 10)
+    svc = QueryService(weather_db,
+                       ExecConfig(scan_cap=tiny, join_bucket=1),
+                       presize=False)
+    rs = svc.execute(plan)
+    check(rs, oracle, name)
+    assert svc.stats.retries >= 1      # the tiny cap did overflow
+    # second execution: cache hit, zero new compiles (compile-counter
+    # on both the service and the underlying executor)
+    compiles = svc.stats.compiles
+    ex_compiles = svc.executor.compile_count
+    rs2 = svc.execute(plan)
+    check(rs2, oracle, name)
+    assert svc.stats.compiles == compiles
+    assert svc.executor.compile_count == ex_compiles
+    assert svc.stats.cache_hits >= 1
+
+
+def test_presized_caps_avoid_retries(weather_db, oracle):
+    """Build-time statistics pre-size first-shot caps: all eight paper
+    queries run exactly with zero overflow retries, and none of them
+    needed the padded-table fallback capacity."""
+    svc = QueryService(weather_db)
+    for name in ALL:
+        check(svc.execute(ALL[name]), oracle, name)
+    assert svc.stats.retries == 0
+    assert svc.stats.executions == len(ALL)
+    tight = [c.scan_cap for c in svc.cached_configs()]
+    assert all(cap is not None and cap < svc._scan_ceiling
+               for cap in tight), tight
+
+
+def test_repeated_query_hits_cache(weather_db, oracle):
+    svc = QueryService(weather_db)
+    check(svc.execute(ALL["Q4"]), oracle, "Q4")
+    compiles = svc.stats.compiles
+    check(svc.execute(ALL["Q4"]), oracle, "Q4")
+    assert svc.stats.compiles == compiles
+    assert svc.stats.cache_hits == 1
+    assert svc.cache_size() == 1
+
+
+def test_regrowth_touches_only_saturated_capacity(weather_db, oracle):
+    """A scan-only overflow must not inflate the join bucket: the
+    per-stage flags drive targeted regrowth."""
+    svc = QueryService(weather_db, ExecConfig(scan_cap=4),
+                       presize=False)
+    check(svc.execute(ALL["Q2"]), oracle, "Q2")     # join-free query
+    assert svc.stats.retries >= 1
+    buckets = {c.join_bucket for c in svc.cached_configs()}
+    assert buckets == {4}, buckets
+
+
+def test_per_stage_overflow_flags(weather_db):
+    """Executor surfaces scan-cap vs join-bucket overflow separately."""
+    ex = Executor(weather_db, ExecConfig(scan_cap=8))
+    rs = ex.run(compile_query(ALL["Q2"]))
+    assert rs.overflow and rs.overflow_scan and not rs.overflow_join
+
+
+def test_distinct_configs_get_distinct_cache_entries(weather_db):
+    svc = QueryService(weather_db, presize=False)
+    plan = compile_query(ALL["Q4"])
+    svc.execute(plan)
+    svc2_cfg = ExecConfig(scan_cap=64)
+    cp_a = svc.compiled(plan, svc.base_config)
+    cp_b = svc.compiled(plan, svc2_cfg)
+    assert cp_a is not cp_b
+    assert svc.cache_size() == 2
+
+
+def test_donated_plan_spends_the_executor(weather_db):
+    """A donated run gives the executor's shared table buffers to that
+    call: reusing the plan OR running any other plan on that executor
+    must be refused, not dereference dead buffers."""
+    ex = Executor(weather_db)
+    cp = ex.compile(compile_query(ALL["Q4"]), donate=True)
+    ex.run_compiled(cp)
+    with pytest.raises(RuntimeError, match="donated"):
+        ex.run_compiled(cp)
+    with pytest.raises(RuntimeError, match="donated"):
+        ex.run(compile_query(ALL["Q2"]))    # different, fresh plan
+
+
+def test_overflow_error_when_growth_exhausted(weather_db):
+    """max_retries=0 with a hopeless cap: the service must refuse to
+    return a truncated result."""
+    svc = QueryService(weather_db, ExecConfig(scan_cap=2),
+                       presize=False, max_retries=0)
+    with pytest.raises(QueryOverflowError):
+        svc.execute(ALL["Q2"])
