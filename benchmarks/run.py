@@ -21,7 +21,7 @@ def main() -> None:
                     help="comma-separated section names")
     args = ap.parse_args()
 
-    from benchmarks import lm_benchmarks, q_benchmarks
+    from benchmarks import lm_benchmarks, q_benchmarks, serving_benchmarks
 
     sections = {
         "fig5_vs_saxon": lambda: q_benchmarks.fig5_vs_saxon(
@@ -44,6 +44,13 @@ def main() -> None:
             ("Q4",) if args.quick else ("Q2", "Q4"),
             (1, 4) if args.quick else (1, 2, 4, 8)),
         "service_ablation": q_benchmarks.service_ablation,
+        "serving": lambda: serving_benchmarks.serving(
+            variants=8 if args.quick else 64,
+            repeats=1 if args.quick else 3,
+            smoke=args.quick,
+            # keep the committed 64-variant record out of quick runs
+            out_path=("BENCH_serving_smoke.json" if args.quick
+                      else "BENCH_serving.json")),
         "ingest": q_benchmarks.ingest,
         "lm_train": lm_benchmarks.train_step_smoke,
         "lm_attention": lm_benchmarks.attention_impls,

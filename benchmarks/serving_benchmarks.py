@@ -1,0 +1,157 @@
+"""Serving-tier benchmark: compile-amortized QPS over a multi-tenant
+constant-variant workload (the prepared-query subsystem's payoff).
+
+The workload is N constant-variants of the paper's Q1/Q2/Q3 templates
+(src/repro/core/workload.py). The old exact-signature path compiles
+every variant; the prepared path lifts constants into runtime
+parameters, so the whole workload compiles once per *template* (<= 3)
+and every further variant is a cache hit. Three serving modes are
+measured:
+
+  exact     — parameterize=False QueryService (PR-1 behavior): one
+              trace+XLA-compile per variant
+  prepared  — prepare/execute with parameter-erased plan sharing
+  batched   — execute_batch: requests grouped by erased signature,
+              one device dispatch per template with stacked parameter
+              vectors
+
+Results go to stdout as CSV rows and to BENCH_serving.json. The run
+doubles as a regression gate: it FAILS (non-zero exit) if the prepared
+path compiles more than once per template or any variant's result
+drifts from the exact path.
+
+  PYTHONPATH=src python -m benchmarks.serving_benchmarks           # 64 variants
+  PYTHONPATH=src python -m benchmarks.serving_benchmarks --smoke   # CI: 4, 1 repeat
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from benchmarks.common import row
+from repro.core import QueryService
+from repro.core.workload import make_workload
+from repro.data.weather import WeatherSpec, build_database
+
+FULL_SPEC = WeatherSpec(num_stations=30,
+                        years=(1976, 1999, 2000, 2001, 2003, 2004),
+                        days_per_year=6)
+SMOKE_SPEC = WeatherSpec(num_stations=8, years=(1999, 2000, 2003),
+                         days_per_year=3)
+
+
+def _timed_pass(serve_fn, queries) -> tuple[float, list]:
+    t0 = time.perf_counter()
+    out = serve_fn(queries)
+    return time.perf_counter() - t0, out
+
+
+def serving(variants: int = 64, repeats: int = 3,
+            out_path: str = "BENCH_serving.json",
+            smoke: bool = False) -> dict:
+    spec = SMOKE_SPEC if smoke else FULL_SPEC
+    db = build_database(spec, num_partitions=4)
+    stations = [spec.station_id(i) for i in range(spec.num_stations)]
+    wl = make_workload(stations, spec.years, total=variants)
+    queries = [q for _, q in wl]
+    templates = sorted({t for t, _ in wl})
+
+    # -- exact-signature path (the old cache): one compile per variant
+    svc_exact = QueryService(db, parameterize=False)
+    t_exact, exact_rs = _timed_pass(
+        lambda qs: [svc_exact.execute(q) for q in qs], queries)
+    compiles_exact = svc_exact.stats.compiles
+
+    # -- prepared path: one compile per template, then pure cache hits
+    svc = QueryService(db)
+    t_prep_cold, prep_rs = _timed_pass(
+        lambda qs: [svc.execute(q) for q in qs], queries)
+    compiles_prepared = svc.stats.compiles
+
+    # parity gate: prepared results must match the exact path
+    mismatches = [i for i, (a, b) in enumerate(zip(exact_rs, prep_rs))
+                  if a.rows() != b.rows()]
+
+    warm_times = []
+    for _ in range(repeats):
+        dt, _ = _timed_pass(lambda qs: [svc.execute(q) for q in qs],
+                            queries)
+        warm_times.append(dt)
+    t_prep_warm = min(warm_times)
+
+    # -- batch admission: one dispatch per template per pass
+    svc_b = QueryService(db)
+    t_batch_cold, batch_rs = _timed_pass(svc_b.execute_batch, queries)
+    batch_times = []
+    for _ in range(repeats):
+        dt, _ = _timed_pass(svc_b.execute_batch, queries)
+        batch_times.append(dt)
+    t_batch_warm = min(batch_times)
+    mismatches += [i for i, (a, b) in enumerate(zip(exact_rs, batch_rs))
+                   if a.rows() != b.rows()]
+
+    n = len(queries)
+    results = {
+        "variants": n,
+        "templates": templates,
+        "smoke": smoke,
+        "compiles_exact_path": compiles_exact,
+        "compiles_prepared_path": compiles_prepared,
+        "compile_sharing_factor": compiles_exact / max(
+            compiles_prepared, 1),
+        "cold_s_exact": t_exact,
+        "cold_s_prepared": t_prep_cold,
+        "compile_amortized_speedup": t_exact / t_prep_cold,
+        "warm_s_prepared": t_prep_warm,
+        "warm_qps_prepared": n / t_prep_warm,
+        "cold_s_batched": t_batch_cold,
+        "warm_s_batched": t_batch_warm,
+        "warm_qps_batched": n / t_batch_warm,
+        "batch_dispatches_per_pass": svc_b.stats.batches // (repeats + 1),
+        "cache_entries": svc.cache_size(),
+        "result_mismatches": len(mismatches),
+    }
+    for k, v in results.items():
+        if isinstance(v, (int, float)):
+            row("serving", f"{n}var", k, float(v))
+
+    # gates BEFORE the json write, so a regressed run never overwrites
+    # the committed good record; RuntimeError (not SystemExit) so
+    # benchmarks/run.py's per-section handler can report it and keep
+    # running the remaining sections
+    if compiles_prepared > len(templates):
+        raise RuntimeError(
+            f"parameter-sharing regression: {compiles_prepared} "
+            f"compiles for {len(templates)} templates "
+            f"({n} variants)")
+    if mismatches:
+        raise RuntimeError(
+            f"prepared/batched results drifted from exact path at "
+            f"variant indices {sorted(set(mismatches))[:8]}")
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {out_path}")
+    return results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: 4 variants, 1 repeat, small data")
+    ap.add_argument("--variants", type=int, default=None)
+    ap.add_argument("--repeats", type=int, default=None)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    variants = args.variants or (4 if args.smoke else 64)
+    repeats = args.repeats or (1 if args.smoke else 3)
+    out = args.out or ("BENCH_serving_smoke.json" if args.smoke
+                       else "BENCH_serving.json")
+    print("table,name,metric,value,derived")
+    serving(variants=variants, repeats=repeats, out_path=out,
+            smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,5 +1,10 @@
 #!/usr/bin/env bash
-# Tier-1 CI loop: the ROADMAP verify command plus timing report.
+# Tier-1 CI loop: the ROADMAP verify command plus timing report, then
+# the serving-benchmark smoke gate (4 variants, 1 repeat — fails fast
+# if prepared-query parameter sharing regresses to per-variant
+# compiles or results drift from the exact path; the full 64-variant
+# run lives in `python -m benchmarks.serving_benchmarks` / the
+# slow-marked test).
 #
 #   scripts/ci.sh              default loop (slow-marked smokes skipped)
 #   FULL=1 scripts/ci.sh       include slow-marked arch smoke tests
@@ -12,5 +17,6 @@ if [ "${FULL:-0}" = "1" ]; then
     MARK=(-m "slow or not slow")
 fi
 # ${MARK[@]+...} keeps set -u happy on bash < 4.4 when MARK is empty
-exec python -m pytest -x -q --durations=10 \
+python -m pytest -x -q --durations=10 \
     ${MARK[@]+"${MARK[@]}"} "$@"
+python -m benchmarks.serving_benchmarks --smoke

@@ -47,6 +47,23 @@ class Var(Expr):
 
 
 @dataclasses.dataclass(frozen=True)
+class Param(Expr):
+    """Runtime query parameter: a lifted literal (prepared.py).
+
+    ``idx`` indexes the prepared query's parameter vector; ``typ`` is
+    the runtime representation ("str" = dictionary sid, "num" = float,
+    "date" = packed yyyymmdd int). Two plans that differ only in lifted
+    constants are structurally equal after lifting — the basis of the
+    parameter-erased plan-cache signature.
+    """
+    idx: int
+    typ: str            # str | num | date
+
+    def __str__(self) -> str:
+        return f"?{self.idx}:{self.typ}"
+
+
+@dataclasses.dataclass(frozen=True)
 class Call(Expr):
     fn: str
     args: tuple[Expr, ...]

@@ -40,6 +40,7 @@ F32 = jnp.float32
 class ExecConfig:
     scan_cap: Optional[int] = None        # None: padded table size
     join_cap: Optional[int] = None        # probe-side output capacity
+                                          # (None: uncompacted probe width)
     join_strategy: str = "broadcast"      # broadcast | repartition
     join_bucket: int = 4                  # hash-bucket probe width
     use_pallas_join: bool = False         # route probe through kernels/
@@ -55,12 +56,14 @@ class ExecConfig:
 class EvalCtx:
     """Per-trace evaluation context: the active config plus per-stage
     overflow accumulators. Scan-cap overflow (DATASCAN/UNNEST fixed
-    capacity) and join-bucket overflow (probe width) are surfaced as
-    separate output flags so an adaptive layer can regrow exactly the
-    capacity that saturated instead of inflating everything."""
+    capacity), join-bucket overflow (probe width) and join-cap overflow
+    (compacted probe-output capacity) are surfaced as separate output
+    flags so an adaptive layer can regrow exactly the capacity that
+    saturated instead of inflating everything."""
     cfg: ExecConfig
     scan_ovf: list = dataclasses.field(default_factory=list)
     join_ovf: list = dataclasses.field(default_factory=list)
+    joincap_ovf: list = dataclasses.field(default_factory=list)
 
 
 class Comm:
@@ -224,7 +227,9 @@ class Executor:
 
     def compile(self, plan: A.Op, mode: str = "sim", mesh=None,
                 axis: str = "data", donate: bool = False,
-                config: Optional[ExecConfig] = None) -> "CompiledPlan":
+                config: Optional[ExecConfig] = None,
+                param_specs: tuple = (),
+                batch: Optional[int] = None) -> "CompiledPlan":
         """Returns a CompiledPlan whose fn maps tables -> raw arrays
         (stacked over partitions); static column schema is captured at
         trace time (strings can't flow through vmap/shard_map).
@@ -234,47 +239,79 @@ class Executor:
         same plan with grown capacities without rebuilding the executor
         (device tables are shared across all compiled variants).
         ``donate=True`` donates the table buffers to the call (one-shot
-        runs only; a donated CompiledPlan must not be reused)."""
+        runs only; a donated CompiledPlan must not be reused).
+
+        ``param_specs`` enables the prepared-query calling convention:
+        the plan may contain ``algebra.Param`` leaves and the compiled
+        fn takes ``(tables, params)`` where ``params`` is a tuple of
+        traced scalars (one per spec) — a binding change is a new
+        argument, never a recompilation. ``batch=B`` additionally maps
+        the fn over a leading [B] axis of every param (one device
+        dispatch serving B concurrent bindings of the same plan)."""
         cfg = config or self.config
         self.compile_count += 1
         schema: dict[int, tuple] = {}
         jit = partial(jax.jit, donate_argnums=(0,)) if donate else jax.jit
+        if batch is not None and not param_specs:
+            raise ValueError("batched compilation needs parameters")
 
-        def local(tables):
+        def local(tables, params=()):
             self.trace_count += 1
-            ev = ExprEval(self.db, tables)
+            ev = ExprEval(self.db, tables, params=params)
             comm = Comm(axis)
             ctx = EvalCtx(cfg)
             tile = self._eval(plan, ev, comm, None, ctx)
             return self._outputs(plan, tile, ev, schema, ctx)
 
         if mode == "sim":
-            fn = jax.vmap(local, in_axes=(self._table_slice_axes(),),
-                          axis_name=axis)
+            if param_specs:
+                # params broadcast to every partition; the optional
+                # outer vmap maps the whole partition-parallel program
+                # over stacked parameter vectors
+                fn = jax.vmap(local,
+                              in_axes=(self._table_slice_axes(), None),
+                              axis_name=axis)
+                if batch is not None:
+                    fn = jax.vmap(fn, in_axes=(None, 0))
+            else:
+                fn = jax.vmap(local, in_axes=(self._table_slice_axes(),),
+                              axis_name=axis)
             return CompiledPlan(jit(fn), schema, plan, cfg, mode,
-                                donated=donate)
+                                donated=donate, param_specs=param_specs,
+                                batch=batch)
         if mode == "spmd":
             from jax.sharding import PartitionSpec as P
             from jax.experimental.shard_map import shard_map
 
-            in_specs = ({k: (jax.tree.map(lambda _: P(), v)
-                             if k == "__derived__" else
-                             jax.tree.map(lambda _: P(axis), v))
-                         for k, v in self.tables.items()},)
+            if batch is not None:
+                raise NotImplementedError(
+                    "batched dispatch is sim-mode only for now")
+            table_specs = {k: (jax.tree.map(lambda _: P(), v)
+                               if k == "__derived__" else
+                               jax.tree.map(lambda _: P(axis), v))
+                           for k, v in self.tables.items()}
 
-            def local_spmd(tables):
+            def local_spmd(tables, params=()):
                 # shard_map keeps the (now size-1) partition axis;
                 # squeeze it for the local fn, restore on outputs
                 der = tables["__derived__"]
                 colls = {k: jax.tree.map(lambda a: a[0], v)
                          for k, v in tables.items() if k != "__derived__"}
                 colls["__derived__"] = der
-                return jax.tree.map(lambda a: a[None], local(colls))
+                return jax.tree.map(lambda a: a[None],
+                                    local(colls, params))
 
+            if param_specs:
+                # params replicated on every device
+                in_specs = (table_specs,
+                            tuple(P() for _ in param_specs))
+            else:
+                in_specs = (table_specs,)
             sm = shard_map(local_spmd, mesh=mesh, in_specs=in_specs,
                            out_specs=P(axis), check_rep=False)
             return CompiledPlan(jit(sm), schema, plan, cfg, mode,
-                                donated=donate)
+                                donated=donate, param_specs=param_specs,
+                                batch=batch)
         raise ValueError(mode)
 
     def run(self, plan: A.Op, mode: str = "sim", mesh=None,
@@ -282,8 +319,56 @@ class Executor:
         cp = self.compile(plan, mode=mode, mesh=mesh, config=config)
         return self.run_compiled(cp)
 
-    def run_compiled(self, cp: "CompiledPlan") -> "ResultSet":
-        """Execute an already-compiled plan against the bound tables."""
+    def run_compiled(self, cp: "CompiledPlan",
+                     params: Optional[tuple] = None) -> "ResultSet":
+        """Execute an already-compiled plan against the bound tables.
+        Parameterized plans take their binding via ``params`` (tuple of
+        scalars matching ``cp.param_specs``)."""
+        if cp.batch is not None:
+            raise RuntimeError("batched plans go through "
+                               "run_compiled_batch")
+        self._check_runnable(cp)
+        if cp.param_specs:
+            if params is None or len(params) != len(cp.param_specs):
+                raise ValueError(
+                    f"plan expects {len(cp.param_specs)} parameters, "
+                    f"got {None if params is None else len(params)}")
+            out = cp.fn(self.tables, tuple(params))
+        else:
+            out = cp.fn(self.tables)
+        # a trace/compile error above consumed nothing (executor stays
+        # usable); once dispatch returned, buffers are donated even if
+        # the fetch below fails — flip the flags in between
+        if cp.donated:
+            cp.spent = True
+            self._tables_donated = True
+        raw = jax.device_get(out)
+        return ResultSet(self.db, cp.plan, raw, cp.schema)
+
+    def run_compiled_batch(self, cp: "CompiledPlan", stacked: tuple,
+                           count: int) -> list["ResultSet"]:
+        """One batched device dispatch: ``stacked`` holds [B]-leading
+        parameter arrays (B = cp.batch); the first ``count`` slices are
+        real requests, the rest padding. Returns one ResultSet per real
+        request."""
+        assert cp.batch is not None and count <= cp.batch
+        self._check_runnable(cp)
+        out = cp.fn(self.tables, stacked)
+        if cp.donated:
+            cp.spent = True
+            self._tables_donated = True
+        raw = jax.device_get(out)
+
+        def take(v, b):
+            return tuple(d[b] for d in v) if isinstance(v, tuple) \
+                else v[b]
+
+        return [ResultSet(self.db, cp.plan,
+                          {k: take(v, b) for k, v in raw.items()},
+                          cp.schema)
+                for b in range(count)]
+
+    def _check_runnable(self, cp: "CompiledPlan") -> None:
         if self._tables_donated:
             raise RuntimeError(
                 "this executor's table buffers were donated to an "
@@ -293,15 +378,6 @@ class Executor:
                 "donated CompiledPlan already executed once; its "
                 "table buffers were donated to that call — "
                 "recompile without donate for reuse")
-        out = cp.fn(self.tables)
-        # a trace/compile error above consumed nothing (executor stays
-        # usable); once dispatch returned, buffers are donated even if
-        # the fetch below fails — flip the flags in between
-        if cp.donated:
-            cp.spent = True
-            self._tables_donated = True
-        raw = jax.device_get(out)
-        return ResultSet(self.db, cp.plan, raw, cp.schema)
 
     # -- recursive evaluation -------------------------------------------------
 
@@ -586,8 +662,39 @@ class Executor:
         for v, c in bcols.items():
             cols[v] = attach(c)
         valid = pvalid & matched
-        return Tile(cols, valid,
-                    left.overflow | right.overflow | bovf)
+        overflow = left.overflow | right.overflow | bovf
+
+        if cfg.join_cap is not None:
+            # capacity-bounded probe output: compact matched rows into
+            # a fixed-width tile (the Hyracks frame-size analogue for
+            # the join's output side). Keeps probe-side blowup bounded
+            # and shapes small; overflow surfaces on its own flag so
+            # the service regrows join_cap — not the scan cap or the
+            # bucket width — when it saturates.
+            idx, valid2, jovf = rows_from_mask(valid, cfg.join_cap)
+            ctx.joincap_ovf.append(jovf)
+
+            def compact(c: Col) -> Col:
+                if c.kind in ("det", "xnode"):
+                    return Col(c.kind,
+                               tuple(_gather(d, idx,
+                                             jnp.nan if d.dtype == F32
+                                             else -1)
+                                     for d in c.data), c.table)
+                if getattr(c.data, "ndim", 1) == 0:
+                    return c    # row-invariant scalar (const/param)
+                if c.data.dtype == jnp.bool_:
+                    fill = False
+                elif c.data.dtype == F32:
+                    fill = jnp.nan
+                else:
+                    fill = -1
+                return Col(c.kind, _gather(c.data, idx, fill), c.table)
+
+            cols = {v: compact(c) for v, c in cols.items()}
+            valid = valid2
+            overflow = overflow | jovf
+        return Tile(cols, valid, overflow)
 
     # -- outputs --------------------------------------------------------------
 
@@ -606,7 +713,9 @@ class Executor:
         out: dict[str, Any] = {"valid": tile.valid,
                                "overflow": tile.overflow,
                                "overflow_scan": or_all(ctx.scan_ovf),
-                               "overflow_join": or_all(ctx.join_ovf)}
+                               "overflow_join": or_all(ctx.join_ovf),
+                               "overflow_join_cap":
+                                   or_all(ctx.joincap_ovf)}
         for v in plan.vars:
             c = tile.cols[v]
             if c.kind == "node":
@@ -638,6 +747,8 @@ class CompiledPlan:
     mode: str = "sim"
     donated: bool = False                 # one-shot: tables die with run 1
     spent: bool = dataclasses.field(default=False, repr=False)
+    param_specs: tuple = ()               # prepared-query parameter types
+    batch: Optional[int] = None           # B of a batched dispatch fn
 
 
 class ResultSet:
@@ -655,6 +766,8 @@ class ResultSet:
         # per-stage flags (absent in pre-refactor raw dicts)
         self.overflow_scan = bool(np.any(raw.get("overflow_scan", False)))
         self.overflow_join = bool(np.any(raw.get("overflow_join", False)))
+        self.overflow_join_cap = bool(
+            np.any(raw.get("overflow_join_cap", False)))
 
     def rows(self) -> list[tuple]:
         assert isinstance(self.plan, A.DistributeResult)

@@ -116,9 +116,13 @@ class ExprEval:
     string constants and element names) + device tables.
     """
 
-    def __init__(self, db: xdm.Database, tables: dict):
+    def __init__(self, db: xdm.Database, tables: dict, params: tuple = ()):
         self.db = db
         self.tables = tables
+        # prepared-query parameter vector: traced scalars (one per
+        # algebra.Param slot), so a binding change is a new input, not
+        # a new compilation
+        self.params = params
 
     # -- atom projections
     def _tab(self, col: Col) -> dict:
@@ -215,9 +219,21 @@ class ExprEval:
             return Col("bool", jnp.bool_(c.value == "true"))
         raise TypeError(c)
 
+    def param(self, e: A.Param) -> Col:
+        p = self.params[e.idx]
+        if e.typ == "str":
+            return Col("str", p)
+        if e.typ == "num":
+            return Col("const", p)
+        if e.typ == "date":
+            return Col("date", p)
+        raise TypeError(e.typ)
+
     def eval(self, e: A.Expr, env: dict[int, Col]) -> Col:
         if isinstance(e, A.Const):
             return self.const(e)
+        if isinstance(e, A.Param):
+            return self.param(e)
         if isinstance(e, A.Var):
             return env[e.n]
         if isinstance(e, A.Some):
@@ -292,6 +308,12 @@ class ExprEval:
         if fn in ("add", "subtract", "multiply", "divide"):
             a = self.atom_num(self.eval(e.args[0], env))
             b = self.atom_num(self.eval(e.args[1], env))
+            if fn == "divide" and isinstance(e.args[1], A.Param):
+                # XLA strength-reduces division by a compile-time
+                # constant into multiplication by its reciprocal;
+                # mirror that for a lifted parameter so prepared
+                # execution stays bit-identical to the baked plan
+                return Col("num", a * (1.0 / b))
             op = {"add": jnp.add, "subtract": jnp.subtract,
                   "multiply": jnp.multiply,
                   "divide": jnp.divide}[fn]

@@ -1,29 +1,54 @@
-"""QueryService: the adaptive execution layer on top of Executor.
+"""QueryService: the serving tier on top of Executor.
 
 The raw executor is a batch tool: every ``run`` re-traces and
 re-compiles, capacities are fixed at config time, and a too-small
 capacity surfaces as an overflow flag the caller must handle. A query
 *service* — the paper's Hyracks deployment serving dynamic jobs, scaled
-to the ROADMAP's million-user north star — needs three more things,
-all provided here:
+to the ROADMAP's million-user north star — needs more, all here:
 
-1. **Compiled-plan cache.** Plans are cached by ``(plan signature,
-   capacity config, mode, num_partitions)``; a repeated query skips
-   trace + XLA compile entirely and goes straight to device execution.
-   Compilation dominates small-query latency by orders of magnitude,
+1. **Prepared queries (prepare/execute lifecycle).** ``prepare(query)``
+   parses, normalizes and optimizes once, then lifts every
+   comparison/arithmetic literal into a typed parameter vector
+   (prepared.py), returning a ``PreparedQuery`` whose *parameter-erased
+   signature* identifies the plan shape with constants removed.
+   ``execute(prepared, bindings)`` converts the binding to device
+   scalars and runs the shared compiled executable — two queries
+   differing only in a constant (``station eq "...12836"`` vs
+   ``...14771"``) compile **once** and thereafter differ only in a
+   runtime argument. Plain ``execute(query_text)`` prepares implicitly
+   and binds the query's own literals, so parameter sharing is on by
+   default for every caller.
+
+2. **LRU-bounded two-level compiled-plan cache.** Level 1 (this cache)
+   maps (erased signature, capacity config, mode, partitions, batch)
+   -> compiled executable, bounded to ``cache_capacity`` entries with
+   least-recently-used eviction — a serving tier must not grow
+   compilation state without bound. Level 2 is stats-only: exact
+   (signature, binding) pairs are counted (``binding_stats``) so
+   operators can see template skew, but bindings never create cache
+   entries. A repeated template skips trace + XLA compile entirely;
+   compilation dominates small-query latency by orders of magnitude,
    so this cache is what makes high-QPS serving plausible.
 
-2. **Overflow-driven capacity regrowth.** Results are *always exact*:
+3. **Batch admission.** ``execute_batch(requests)`` groups concurrent
+   requests by erased signature; each group becomes ONE device
+   dispatch of a batch-compiled executable over stacked parameter
+   vectors (executor ``batch=B``), padding to power-of-two buckets so
+   batched variants stay few. Overflow inside a batch falls back to
+   per-request execution, preserving exactness.
+
+4. **Overflow-driven capacity regrowth.** Results are *always exact*:
    if a run reports scan-cap overflow the scan capacity grows
    geometrically (bounded by the padded table size, where overflow is
-   impossible by construction); if the hash-join probe reports bucket
-   overflow the bucket width grows the same way. The per-stage flags
-   from the executor mean only the saturated capacity is regrown, so
-   caps stay tight and padded compute stays low. Regrowth recompiles
-   (new static shapes) — but each grown variant lands in the cache, so
-   a workload pays each growth step once.
+   impossible by construction); join-bucket overflow grows the bucket
+   width; join-cap overflow (the compacted probe-output capacity) grows
+   ``join_cap`` the same way. Per-stage flags from the executor mean
+   only the saturated capacity is regrown, so caps stay tight and
+   padded compute stays low. Regrowth recompiles (new static shapes) —
+   but each grown variant lands in the cache, so a workload pays each
+   growth step once.
 
-3. **Statistics-based cap pre-sizing.** ``Database`` gathers per-tag
+5. **Statistics-based cap pre-sizing.** ``Database`` gathers per-tag
    node counts at build time; a child path ``/a/b/c`` can match at most
    ``count(tag == c)`` rows per partition, so first-shot caps are close
    to right and the retry loop rarely fires at all.
@@ -31,14 +56,20 @@ all provided here:
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Union
+from collections import OrderedDict
+from typing import Optional, Sequence, Union
 
 from repro.core import algebra as A
 from repro.core import xdm
-from repro.core.executor import CompiledPlan, ExecConfig, Executor, ResultSet
+from repro.core.executor import (CompiledPlan, ExecConfig, Executor,
+                                 ResultSet)
 from repro.core.physical import estimate_scan_cap, round_cap
+from repro.core.prepared import (PreparedQuery, bind_params, prepare_plan,
+                                 stack_params)
 from repro.core.rewrite import optimize
 from repro.core.translator import translate
+
+Query = Union[str, A.Op, PreparedQuery]
 
 
 class QueryOverflowError(RuntimeError):
@@ -48,15 +79,20 @@ class QueryOverflowError(RuntimeError):
 @dataclasses.dataclass
 class ServiceStats:
     executions: int = 0     # queries served
-    runs: int = 0           # device executions (executions + retries)
+    runs: int = 0           # device executions (executions + retries,
+                            # a batched dispatch counting once)
     retries: int = 0        # overflow-triggered re-executions
-    cache_hits: int = 0
+    cache_hits: int = 0     # compiled-plan (erased-signature) hits
     cache_misses: int = 0
-
-    @property
-    def compiles(self) -> int:
-        """Trace+compile events — every cache miss compiles, exactly."""
-        return self.cache_misses
+    compiles: int = 0       # actual trace+compile events. A
+                            # parameterized hit (new binding, known
+                            # template) is an exact-binding miss but
+                            # NOT a compile — see exact_misses.
+    evictions: int = 0      # LRU-bounded cache evictions
+    exact_hits: int = 0     # (signature, binding) seen before
+    exact_misses: int = 0   # new binding (shared plan may still hit)
+    batches: int = 0        # batched device dispatches
+    batched_requests: int = 0   # requests served by those dispatches
 
     @property
     def hit_rate(self) -> float:
@@ -65,17 +101,23 @@ class ServiceStats:
 
 
 class QueryService:
-    """Adaptive query execution: cache + regrowth + pre-sizing.
+    """Serving tier: prepared queries + LRU plan cache + batch
+    admission + regrowth + pre-sizing.
 
-    ``execute`` accepts XQuery text or an optimized plan and returns an
-    exact (non-overflow) ResultSet or raises QueryOverflowError.
+    ``execute`` accepts XQuery text, an optimized plan, or a
+    ``PreparedQuery`` (with optional ``bindings``) and returns an exact
+    (non-overflow) ResultSet or raises QueryOverflowError.
+    ``parameterize=False`` restores the exact-signature cache (every
+    constant-variant compiles separately) — kept for ablation.
     """
 
     def __init__(self, db: xdm.Database,
                  config: Optional[ExecConfig] = None, *,
                  mode: str = "sim", mesh=None, max_retries: int = 8,
-                 growth: int = 4, presize: bool = True):
+                 growth: int = 4, presize: bool = True,
+                 cache_capacity: int = 64, parameterize: bool = True):
         assert growth > 1, "capacity growth must be geometric"
+        assert cache_capacity >= 1
         self.db = db
         self.base_config = config or ExecConfig()
         self.mode = mode
@@ -83,71 +125,130 @@ class QueryService:
         self.max_retries = max_retries
         self.growth = growth
         self.presize = presize
+        self.cache_capacity = cache_capacity
+        self.parameterize = parameterize
         self.executor = Executor(db, self.base_config)
         self.stats = ServiceStats()
-        self._cache: dict[tuple, CompiledPlan] = {}
-        # last config that produced an exact result, per plan signature
-        # — repeats skip the regrowth ladder, not just the compiles
-        self._good_cfg: dict[str, ExecConfig] = {}
-        # query text -> optimized plan (parsing/rewrite off the warm path)
-        self._plan_memo: dict[str, A.Op] = {}
-        # id(plan) -> (plan ref, signature): the held reference keeps
-        # the id stable, making the warm path a pure dict probe instead
-        # of an O(plan-size) repr walk per request
-        self._sig_memo: dict[int, tuple[A.Op, str]] = {}
+        # level-1 cache: erased signature -> compiled plan, LRU-bounded
+        self._cache: OrderedDict[tuple, CompiledPlan] = OrderedDict()
+        # level-2, stats only: exact (signature, binding) -> hit count,
+        # LRU-bounded like the plan cache (distinct bindings are
+        # user-cardinality — unbounded by nature)
+        self._bindings: OrderedDict[tuple, int] = OrderedDict()
+        self._bindings_capacity = 4096
+        # last config that produced an exact result, per erased
+        # signature — repeats (and all constant-variants of a template)
+        # skip the regrowth ladder, not just the compiles. Bounded like
+        # every other per-signature map (keys are full plan reprs)
+        self._good_cfg: OrderedDict[str, ExecConfig] = OrderedDict()
+        self._good_cfg_capacity = 4096
+        # query text -> PreparedQuery (parse/rewrite/lift off the warm
+        # path)
+        self._prepared_memo: dict[str, PreparedQuery] = {}
+        # id(plan) -> (plan ref, PreparedQuery): the held reference
+        # keeps the id stable, making the warm path a pure dict probe
+        # instead of an O(plan-size) lift+repr walk per request
+        self._plan_prep_memo: dict[int, tuple[A.Op, PreparedQuery]] = {}
         # scan caps are clamped to the padded per-partition table size,
         # where rows_from_mask can no longer overflow — the regrowth
         # ceiling and the proof the retry loop terminates exactly
         self._scan_ceiling = max(
             t["kind"].shape[1] for name, t in self.executor.tables.items()
             if name != "__derived__")
+        # join_cap's ceiling: the widest possible probe side is every
+        # partition's padded rows gathered to one partition, where
+        # compaction can no longer overflow
+        self._joincap_ceiling = (self._scan_ceiling
+                                 * self.executor.num_partitions)
         # the probe unrolls `join_bucket` times at trace time, so the
         # ladder must stop well before trace blowup; widths past this
         # mean duplicate build keys (M:N join — unsupported), not hash
         # collisions, and regrowth cannot fix those
         self._bucket_ceiling = 64
 
-    # -- plan / cache plumbing ---------------------------------------------
+    # -- prepare -----------------------------------------------------------
 
     def plan_for(self, query: Union[str, A.Op]) -> A.Op:
+        """Query text -> a directly runnable optimized plan (constants
+        baked, no Param leaves) — Executor-compatible standalone. The
+        serving path itself goes through ``prepare``."""
         if isinstance(query, A.Op):
             return query
-        plan = self._plan_memo.get(query)
-        if plan is None:
-            plan = optimize(translate(query))
-            self._plan_memo[query] = plan
-        return plan
+        return optimize(translate(query))
 
-    def _plan_sig(self, plan: A.Op) -> str:
-        """Operators/exprs are frozen dataclasses, so repr is a stable
-        structural signature (same query text -> same signature);
-        memoized per plan object for the warm path."""
-        ent = self._sig_memo.get(id(plan))
-        if ent is not None and ent[0] is plan:
+    def prepare(self, query: Query) -> PreparedQuery:
+        """Query -> PreparedQuery: parse + normalize + optimize + lift
+        literals into the parameter vector. Memoized; all constant-
+        variants of a template produce equal erased signatures."""
+        if isinstance(query, PreparedQuery):
+            return query
+        if isinstance(query, str):
+            pq = self._prepared_memo.get(query)
+            if pq is None:
+                pq = self._prepare_plan(optimize(translate(query)), query)
+                if len(self._prepared_memo) >= 4096:
+                    # adversarially unique query texts must not grow
+                    # host memory forever; a flush re-prepares
+                    self._prepared_memo.clear()
+                self._prepared_memo[query] = pq
+            return pq
+        ent = self._plan_prep_memo.get(id(query))
+        if ent is not None and ent[0] is query:
             return ent[1]
-        sig = repr(plan)
-        if len(self._sig_memo) >= 4096:
+        pq = self._prepare_plan(query, None)
+        if len(self._plan_prep_memo) >= 4096:
             # callers passing a fresh A.Op per request would otherwise
-            # grow this forever; a flush costs one repr walk per entry
-            self._sig_memo.clear()
-        self._sig_memo[id(plan)] = (plan, sig)
-        return sig
+            # grow this forever; a flush costs one lift walk per entry
+            self._plan_prep_memo.clear()
+        self._plan_prep_memo[id(query)] = (query, pq)
+        return pq
 
-    def _key(self, sig: str, cfg: ExecConfig) -> tuple:
+    def _prepare_plan(self, plan: A.Op,
+                      text: Optional[str]) -> PreparedQuery:
+        if not self.parameterize:
+            # ablation mode: exact-signature cache, constants baked
+            return PreparedQuery(plan, (), (), repr(plan), text)
+        # prepare_plan is idempotent: an already-erased plan (a
+        # PreparedQuery's .plan fed back in) keeps its Param layout
+        return prepare_plan(plan, text)
+
+    @staticmethod
+    def _values_for(pq: PreparedQuery,
+                    bindings: Optional[Sequence]) -> tuple:
+        if bindings is not None:
+            return tuple(bindings)
+        if pq.defaults is None:
+            raise ValueError(
+                "this PreparedQuery came from an already-erased plan "
+                "and has no default binding; pass bindings=")
+        return pq.defaults
+
+    # -- cache plumbing ----------------------------------------------------
+
+    def _key(self, sig: str, cfg: ExecConfig,
+             batch: Optional[int] = None) -> tuple:
         return (sig, cfg.cap_key(), self.mode,
-                self.executor.num_partitions)
+                self.executor.num_partitions, batch)
 
     def compiled(self, plan: A.Op, cfg: ExecConfig,
-                 sig: Optional[str] = None) -> CompiledPlan:
-        key = self._key(sig or self._plan_sig(plan), cfg)
+                 sig: Optional[str] = None, param_specs: tuple = (),
+                 batch: Optional[int] = None) -> CompiledPlan:
+        key = self._key(sig if sig is not None else repr(plan), cfg,
+                        batch)
         cp = self._cache.get(key)
         if cp is not None:
+            self._cache.move_to_end(key)
             self.stats.cache_hits += 1
             return cp
         self.stats.cache_misses += 1
+        self.stats.compiles += 1
         cp = self.executor.compile(plan, mode=self.mode, mesh=self.mesh,
-                                   config=cfg)
+                                   config=cfg, param_specs=param_specs,
+                                   batch=batch)
         self._cache[key] = cp
+        while len(self._cache) > self.cache_capacity:
+            self._cache.popitem(last=False)
+            self.stats.evictions += 1
         return cp
 
     def cache_size(self) -> int:
@@ -157,6 +258,30 @@ class QueryService:
         """ExecConfig of every cached compilation (observability for
         benchmarks/tests without leaking the cache-key layout)."""
         return [cp.config for cp in self._cache.values()]
+
+    def binding_stats(self) -> dict[tuple, int]:
+        """Exact (signature, binding) hit counts — the stats-only
+        second cache level (template-skew observability)."""
+        return dict(self._bindings)
+
+    def _note_good_cfg(self, sig: str, cfg: ExecConfig) -> None:
+        self._good_cfg[sig] = cfg
+        self._good_cfg.move_to_end(sig)
+        while len(self._good_cfg) > self._good_cfg_capacity:
+            self._good_cfg.popitem(last=False)
+
+    def _note_binding(self, sig: str, values: tuple) -> None:
+        key = (sig, values)
+        seen = self._bindings.get(key)
+        if seen is None:
+            self.stats.exact_misses += 1
+            self._bindings[key] = 1
+            while len(self._bindings) > self._bindings_capacity:
+                self._bindings.popitem(last=False)
+        else:
+            self.stats.exact_hits += 1
+            self._bindings[key] = seen + 1
+            self._bindings.move_to_end(key)
 
     # -- cap pre-sizing ------------------------------------------------------
 
@@ -219,29 +344,44 @@ class QueryService:
             if new_bucket > cfg.join_bucket:
                 cfg = dataclasses.replace(cfg, join_bucket=new_bucket)
                 grew = True
+        if rs.overflow_join_cap and cfg.join_cap is not None:
+            new_jcap = min(round_cap(cfg.join_cap * self.growth),
+                           self._joincap_ceiling)
+            if new_jcap > cfg.join_cap:
+                cfg = dataclasses.replace(cfg, join_cap=new_jcap)
+                grew = True
         if not grew:
             raise QueryOverflowError(
                 "overflow persists with capacities at their ceilings "
-                f"(scan_cap={cfg.scan_cap}, join_bucket="
-                f"{cfg.join_bucket}) — result would be inexact")
+                f"(scan_cap={cfg.scan_cap}, join_cap={cfg.join_cap}, "
+                f"join_bucket={cfg.join_bucket}) — result would be "
+                "inexact")
         return cfg
 
     # -- serving ------------------------------------------------------------------
 
-    def execute(self, query: Union[str, A.Op]) -> ResultSet:
-        """Run to an exact result: cache-hit fast path, overflow-driven
-        regrowth slow path (bounded retries, each landing in the cache
-        so the workload pays a growth step once)."""
-        plan = self.plan_for(query)
-        sig = self._plan_sig(plan)
-        cfg = self._good_cfg.get(sig) or self._presized_config(plan)
+    def execute(self, query: Query,
+                bindings: Optional[Sequence] = None) -> ResultSet:
+        """Run to an exact result: cache-hit fast path (shared across
+        all constant-variants of a template), overflow-driven regrowth
+        slow path (bounded retries, each landing in the cache so the
+        workload pays a growth step once). ``bindings`` overrides the
+        prepared query's parameter values (defaults: the literals of
+        the source query)."""
+        pq = self.prepare(query)
+        values = self._values_for(pq, bindings)
+        params = bind_params(self.db, pq.specs, values)
         self.stats.executions += 1
+        self._note_binding(pq.signature, values)
+        cfg = (self._good_cfg.get(pq.signature)
+               or self._presized_config(pq.plan))
         for attempt in range(self.max_retries + 1):
-            cp = self.compiled(plan, cfg, sig=sig)
-            rs = self.executor.run_compiled(cp)
+            cp = self.compiled(pq.plan, cfg, sig=pq.signature,
+                               param_specs=pq.specs)
+            rs = self.executor.run_compiled(cp, params=params)
             self.stats.runs += 1
             if not rs.overflow:
-                self._good_cfg[sig] = cfg
+                self._note_good_cfg(pq.signature, cfg)
                 return rs
             if attempt == self.max_retries:
                 break
@@ -250,4 +390,66 @@ class QueryService:
         raise QueryOverflowError(
             f"still overflowing after {self.max_retries} regrowth "
             f"retries (scan_cap={cfg.scan_cap}, "
-            f"join_bucket={cfg.join_bucket})")
+            f"join_cap={cfg.join_cap}, join_bucket={cfg.join_bucket})")
+
+    # -- batch admission ---------------------------------------------------
+
+    def execute_batch(self, requests: Sequence) -> list[ResultSet]:
+        """Serve concurrent requests with one device dispatch per
+        distinct plan shape. Each request is a query (text / plan /
+        PreparedQuery) or a ``(query, bindings)`` pair. Requests
+        sharing an erased signature are stacked into a batched
+        executable (parameter vectors get a leading [B] axis, padded
+        to a power-of-two bucket); singleton or parameterless groups
+        go through the scalar path. Results keep request order and are
+        exactly what per-request ``execute`` would return — a batch
+        that overflows falls back to per-request regrowth."""
+        norm: list[tuple[PreparedQuery, tuple]] = []
+        for r in requests:
+            q, b = r if isinstance(r, tuple) else (r, None)
+            pq = self.prepare(q)
+            norm.append((pq, self._values_for(pq, b)))
+        results: list[Optional[ResultSet]] = [None] * len(norm)
+        groups: OrderedDict[str, list[int]] = OrderedDict()
+        for i, (pq, _) in enumerate(norm):
+            groups.setdefault(pq.signature, []).append(i)
+        for sig, idxs in groups.items():
+            pq = norm[idxs[0]][0]
+            if len(idxs) == 1 or not pq.specs or self.mode != "sim":
+                # no batching win (or batched lowering unsupported):
+                # scalar path per request
+                for i in idxs:
+                    results[i] = self.execute(pq, norm[i][1])
+                continue
+            bound = [bind_params(self.db, pq.specs, norm[i][1])
+                     for i in idxs]
+            cfg = (self._good_cfg.get(sig)
+                   or self._presized_config(pq.plan))
+            bucket = _next_pow2(len(idxs))
+            cp = self.compiled(pq.plan, cfg, sig=sig,
+                               param_specs=pq.specs, batch=bucket)
+            rss = self.executor.run_compiled_batch(
+                cp, stack_params(bound, bucket), len(idxs))
+            self.stats.runs += 1
+            if any(rs.overflow for rs in rss):
+                # exactness first: re-serve the group through the
+                # regrowth path (the grown config lands in _good_cfg,
+                # so the next batch of this template dispatches once)
+                for i in idxs:
+                    results[i] = self.execute(pq, norm[i][1])
+                continue
+            self._note_good_cfg(sig, cfg)
+            self.stats.executions += len(idxs)
+            self.stats.batches += 1
+            self.stats.batched_requests += len(idxs)
+            for i, rs in zip(idxs, rss):
+                self._note_binding(sig, norm[i][1])
+                results[i] = rs
+        return results
+
+
+def _next_pow2(n: int) -> int:
+    b = 1
+    while b < n:
+        b <<= 1
+    return b

@@ -1,0 +1,89 @@
+"""Multi-tenant serving workload: constant-variants of the paper's
+Q1/Q2/Q3 templates.
+
+Every variant of one template parses and optimizes to the *same* plan
+shape — only the literals differ — so the prepared-query subsystem
+(prepared.py) erases them to one signature and the whole workload
+compiles once per template. This module is the shared source of those
+variants for tests (parameter-sharing regression coverage) and
+benchmarks (compile-amortized QPS in serving_benchmarks.py).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+
+def q1_variant(station: str, year: int, month: int, day: int) -> str:
+    """Q1 template: one station's readings on one calendar date."""
+    return f'''
+for $r in collection("/sensors")/dataCollection/data
+let $datetime := dateTime(data($r/date))
+where $r/station eq "{station}"
+ and year-from-dateTime($datetime) ge {year}
+ and month-from-dateTime($datetime) eq {month}
+ and day-from-dateTime($datetime) eq {day}
+return $r
+'''
+
+
+def q2_variant(datatype: str, threshold: float) -> str:
+    """Q2 template: readings of one type above a threshold."""
+    return f'''
+for $r in collection("/sensors")/dataCollection/data
+where $r/dataType eq "{datatype}"
+and decimal(data($r/value)) gt {threshold}
+return $r
+'''
+
+
+def q3_variant(station: str, datatype: str, year: int,
+               divisor: int = 10) -> str:
+    """Q3 template: scaled yearly sum of one station's readings."""
+    return f'''
+sum(
+ for $r in collection("/sensors")/dataCollection/data
+ where $r/station eq "{station}"
+ and $r/dataType eq "{datatype}"
+ and year-from-dateTime(dateTime(data($r/date))) eq {year}
+ return $r/value
+) div {divisor}
+'''
+
+
+def make_workload(stations: Sequence[str],
+                  years: Sequence[int],
+                  total: int = 64) -> list[tuple[str, str]]:
+    """``total`` (template_name, query_text) pairs cycling through the
+    three templates with rotating constants. Deterministic; constants
+    are drawn from the given stations/years so variants hit real data
+    (an absent constant would still be *correct* — empty result — but
+    would not exercise the value paths)."""
+    dates = [(12, 25), (7, 4), (1, 15), (3, 10)]
+    q2_types = ("AWND", "PRCP", "TMAX", "SNOW")
+    q3_types = ("PRCP", "TMAX", "TMIN")
+    ns, ny = len(stations), len(years)
+    out: list[tuple[str, str]] = []
+    # per-template odometer counters: constant tuples enumerate a mixed-
+    # radix space, so variants are textually distinct by construction
+    # (the exact-signature baseline memoizes repeated query text, which
+    # would understate its compile count if the workload repeated)
+    k1 = k2 = k3 = 0
+    while len(out) < total:
+        t = len(out) % 3
+        if t == 0:
+            m, d = dates[(k1 // (ns * ny)) % len(dates)]
+            out.append(("Q1", q1_variant(stations[k1 % ns],
+                                         years[(k1 // ns) % ny], m, d)))
+            k1 += 1
+        elif t == 1:
+            # threshold is k-linear: distinct on its own
+            out.append(("Q2", q2_variant(q2_types[k2 % len(q2_types)],
+                                         100.0 + 7.5 * k2)))
+            k2 += 1
+        else:
+            out.append(("Q3", q3_variant(
+                stations[(k3 // ny) % ns], q3_types[(k3 // (ns * ny))
+                                                    % len(q3_types)],
+                years[k3 % ny], 10 + (k3 % 7))))
+            k3 += 1
+    return out

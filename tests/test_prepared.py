@@ -1,0 +1,249 @@
+"""Prepared-query subsystem: parameter lifting, erased-signature plan
+sharing, binding semantics, stats accounting, and the batch-admission
+frontend (prepared.py + the serving tier in service.py)."""
+import pytest
+from conftest import canon
+
+from repro.core import (Executor, PreparedQuery, QueryService,
+                        compile_query, lift_params)
+from repro.core import algebra as A
+from repro.core.queries import ALL, SCALAR
+from repro.core.workload import (make_workload, q1_variant, q2_variant,
+                                 q3_variant)
+
+
+def _no_value_consts(plan: A.Op) -> bool:
+    """After lifting, no comparison/arithmetic argument is a literal."""
+    from repro.core.prepared import LIFTABLE_FNS
+
+    def exprs(e):
+        yield e
+        if isinstance(e, A.Call):
+            for a in e.args:
+                yield from exprs(a)
+        if isinstance(e, A.Some):
+            yield from exprs(e.source)
+            yield from exprs(e.cond)
+
+    for op in A.walk(plan):
+        for root in A.used_exprs(op):
+            for e in exprs(root):
+                if isinstance(e, A.Call) and e.fn in LIFTABLE_FNS:
+                    for a in e.args:
+                        if isinstance(a, A.Const):
+                            return False
+    return True
+
+
+@pytest.mark.parametrize("name", list(ALL))
+def test_lift_parity_all_eight(weather_db, name):
+    """Prepared (parameterized) execution must equal direct unprepared
+    execution exactly, for every paper query."""
+    plan = compile_query(ALL[name])
+    direct = Executor(weather_db).run(plan)
+    svc = QueryService(weather_db)
+    prepared = svc.execute(ALL[name])
+    assert not prepared.overflow
+    if name in SCALAR:
+        assert prepared.scalar() == direct.scalar()
+    else:
+        assert prepared.rows() == direct.rows()
+
+
+@pytest.mark.parametrize("name", list(ALL))
+def test_lift_erases_value_literals(name):
+    """Every comparison/arithmetic literal is lifted; structural
+    constants (element names, types) stay baked."""
+    plan = compile_query(ALL[name])
+    erased, specs, defaults = lift_params(plan)
+    assert len(specs) == len(defaults)
+    assert _no_value_consts(erased)
+    # the paper queries all compare against at least one literal
+    assert specs, name
+
+
+def test_constant_variants_share_signature(weather_db):
+    """Two queries differing only in constants: equal erased
+    signature, one compiled executable, both results exact."""
+    svc = QueryService(weather_db)
+    a = q1_variant("GHCND:USW00012836", 2003, 12, 25)
+    b = q1_variant("GHCND:USW00014771", 1999, 7, 4)
+    pa, pb = svc.prepare(a), svc.prepare(b)
+    assert pa.signature == pb.signature
+    assert pa.defaults != pb.defaults
+    ra = svc.execute(a)
+    compiles = svc.stats.compiles
+    rb = svc.execute(b)
+    assert svc.stats.compiles == compiles        # shared executable
+    assert svc.stats.cache_hits >= 1
+    # each variant equals its own direct execution
+    ex = Executor(weather_db)
+    assert ra.rows() == ex.run(compile_query(a)).rows()
+    assert rb.rows() == ex.run(compile_query(b)).rows()
+    assert ra.rows() != rb.rows()                # and they differ
+
+
+def test_explicit_bindings_override_defaults(weather_db):
+    """execute(prepared, bindings) == executing the query text that
+    has those constants inline."""
+    svc = QueryService(weather_db)
+    pq = svc.prepare(q3_variant("GHCND:USW00014771", "PRCP", 1999))
+    assert sorted(s.typ for s in pq.specs) == ["num", "num", "str",
+                                               "str"]
+    # slot order is plan pre-order; rebind positionally via defaults
+    swap = {"GHCND:USW00014771": "GHCND:USW00012836", "PRCP": "TMAX",
+            1999.0: 2000.0}
+    other = tuple(swap.get(v, v) for v in pq.defaults)
+    rs = svc.execute(pq, bindings=other)
+    inline = svc.execute(q3_variant("GHCND:USW00012836", "TMAX", 2000))
+    assert rs.scalar() == inline.scalar()
+
+
+def test_unknown_string_binding_yields_empty(weather_db):
+    """A string binding absent from the dictionary matches nothing —
+    empty result, no error (same as the baked-constant path)."""
+    svc = QueryService(weather_db)
+    pq = svc.prepare(q2_variant("AWND", 100.0))
+    rs = svc.execute(pq, bindings=("NO-SUCH-TYPE", 100.0))
+    assert rs.rows() == []
+
+
+def test_binding_arity_checked(weather_db):
+    svc = QueryService(weather_db)
+    pq = svc.prepare(q2_variant("AWND", 100.0))
+    with pytest.raises(ValueError, match="parameters"):
+        svc.execute(pq, bindings=("AWND",))
+
+
+def test_compiles_counts_actual_compile_events(weather_db):
+    """Satellite: a parameterized hit is an exact-binding miss but NOT
+    a compile. 6 variants of one template -> 1 compile, 6 exact
+    misses; re-running one -> an exact hit, still 1 compile."""
+    svc = QueryService(weather_db)
+    variants = [q2_variant("AWND", 50.0 * i) for i in range(6)]
+    for v in variants:
+        svc.execute(v)
+    assert svc.stats.compiles == 1
+    assert svc.stats.exact_misses == 6
+    assert svc.stats.exact_hits == 0
+    svc.execute(variants[0])
+    assert svc.stats.exact_hits == 1
+    assert svc.stats.compiles == 1
+    assert ((svc.prepare(variants[0]).signature,
+             svc.prepare(variants[0]).defaults)
+            in svc.binding_stats())
+
+
+def test_parameterize_off_restores_exact_signature_cache(weather_db):
+    """Ablation mode: every constant-variant compiles separately."""
+    svc = QueryService(weather_db, parameterize=False)
+    for i in range(3):
+        svc.execute(q2_variant("AWND", 50.0 * i))
+    assert svc.stats.compiles == 3
+    assert svc.cache_size() == 3
+
+
+def test_prepare_idempotent_on_erased_plan(weather_db):
+    """Feeding a PreparedQuery's own (Param-bearing) plan back in must
+    keep the parameter layout — and demand explicit bindings, since
+    the original literals are gone."""
+    svc = QueryService(weather_db)
+    pq = svc.prepare(q2_variant("AWND", 100.0))
+    pq2 = svc.prepare(pq.plan)
+    assert pq2.signature == pq.signature
+    assert [s.typ for s in pq2.specs] == [s.typ for s in pq.specs]
+    assert pq2.defaults is None
+    rs = svc.execute(pq.plan, bindings=pq.defaults)
+    assert rs.rows() == svc.execute(pq).rows()
+    with pytest.raises(ValueError, match="binding"):
+        svc.execute(pq.plan)
+
+
+def test_plan_for_returns_runnable_plan(weather_db):
+    """plan_for stays Executor-compatible: constants baked, no Param
+    leaves."""
+    svc = QueryService(weather_db)
+    plan = svc.plan_for(ALL["Q2"])
+    assert not any(isinstance(e, A.Param)
+                   for op in A.walk(plan)
+                   for root in A.used_exprs(op)
+                   for e in _expr_leaves(root))
+    rs = Executor(weather_db).run(plan)
+    assert not rs.overflow and rs.rows()
+
+
+def _expr_leaves(e):
+    yield e
+    if isinstance(e, A.Call):
+        for a in e.args:
+            yield from _expr_leaves(a)
+    if isinstance(e, A.Some):
+        yield from _expr_leaves(e.source)
+        yield from _expr_leaves(e.cond)
+
+
+def test_prepared_query_is_reusable_value(weather_db):
+    """PreparedQuery round-trips through execute repeatedly and works
+    when constructed from an optimized plan object."""
+    svc = QueryService(weather_db)
+    plan = compile_query(ALL["Q4"])
+    pq = svc.prepare(plan)
+    assert isinstance(pq, PreparedQuery)
+    r1 = svc.execute(pq)
+    r2 = svc.execute(pq)
+    assert r1.scalar() == r2.scalar()
+    assert svc.prepare(plan) is pq        # memoized by plan identity
+
+
+# -- batch admission ---------------------------------------------------------
+
+
+def test_batch_matches_per_request_results(weather_db):
+    """execute_batch returns, in order, exactly what per-request
+    execute would — across mixed templates and bindings."""
+    svc_single = QueryService(weather_db)
+    svc_batch = QueryService(weather_db)
+    stations = ["GHCND:USW00012836", "GHCND:USW00014771",
+                "GHCND:USW90000003"]
+    wl = [q for _, q in make_workload(stations,
+                                      (1976, 1999, 2000, 2003),
+                                      total=12)]
+    singles = [svc_single.execute(q) for q in wl]
+    batched = svc_batch.execute_batch(wl)
+    assert len(batched) == len(singles)
+    for s, b in zip(singles, batched):
+        assert s.rows() == b.rows()
+    # one batched dispatch per template, all requests batched
+    assert svc_batch.stats.batches == 3
+    assert svc_batch.stats.batched_requests == 12
+    assert svc_batch.stats.compiles == 3
+
+
+def test_batch_with_explicit_bindings_and_singletons(weather_db):
+    """(query, bindings) pairs mix with bare queries; a singleton
+    group takes the scalar path."""
+    svc = QueryService(weather_db)
+    pq2 = svc.prepare(q2_variant("AWND", 100.0))
+    reqs = [(pq2, ("AWND", 200.0)),
+            (pq2, ("PRCP", 300.0)),
+            q1_variant("GHCND:USW00012836", 2003, 12, 25)]
+    out = svc.execute_batch(reqs)
+    assert out[0].rows() == svc.execute(pq2, ("AWND", 200.0)).rows()
+    assert out[1].rows() == svc.execute(pq2, ("PRCP", 300.0)).rows()
+    assert out[2].rows() == svc.execute(reqs[2]).rows()
+    assert svc.stats.batches == 1        # only the Q2 pair batched
+
+
+def test_batch_overflow_falls_back_to_exact(weather_db):
+    """A batch whose config overflows must still return exact results
+    (per-request regrowth fallback)."""
+    from repro.core import ExecConfig
+    svc = QueryService(weather_db, ExecConfig(scan_cap=4),
+                       presize=False)
+    reqs = [q2_variant("AWND", 50.0 * i) for i in range(4)]
+    out = svc.execute_batch(reqs)
+    oracle = QueryService(weather_db)
+    for q, rs in zip(reqs, out):
+        assert not rs.overflow
+        assert canon(rs.rows()) == canon(oracle.execute(q).rows())
+    assert svc.stats.retries >= 1

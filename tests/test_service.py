@@ -95,9 +95,12 @@ def test_distinct_configs_get_distinct_cache_entries(weather_db):
     svc = QueryService(weather_db, presize=False)
     plan = compile_query(ALL["Q4"])
     svc.execute(plan)
+    pq = svc.prepare(plan)
     svc2_cfg = ExecConfig(scan_cap=64)
-    cp_a = svc.compiled(plan, svc.base_config)
-    cp_b = svc.compiled(plan, svc2_cfg)
+    cp_a = svc.compiled(pq.plan, svc.base_config, sig=pq.signature,
+                        param_specs=pq.specs)
+    cp_b = svc.compiled(pq.plan, svc2_cfg, sig=pq.signature,
+                        param_specs=pq.specs)
     assert cp_a is not cp_b
     assert svc.cache_size() == 2
 
@@ -122,3 +125,61 @@ def test_overflow_error_when_growth_exhausted(weather_db):
                        presize=False, max_retries=0)
     with pytest.raises(QueryOverflowError):
         svc.execute(ALL["Q2"])
+
+
+def test_lru_eviction_capacity_one(weather_db, oracle):
+    """Capacity-1 cache: the second template evicts the first; re-
+    executing the first re-prepares and recompiles, and every result
+    stays exact throughout."""
+    svc = QueryService(weather_db, cache_capacity=1)
+    check(svc.execute(ALL["Q4"]), oracle, "Q4")
+    assert svc.cache_size() == 1
+    check(svc.execute(ALL["Q2"]), oracle, "Q2")     # evicts Q4
+    assert svc.cache_size() == 1
+    assert svc.stats.evictions == 1
+    compiles = svc.stats.compiles
+    check(svc.execute(ALL["Q4"]), oracle, "Q4")     # must recompile
+    assert svc.stats.compiles == compiles + 1
+    assert svc.cache_size() == 1
+
+
+def test_lru_recency_order(weather_db, oracle):
+    """Touching an entry protects it: with capacity 2, re-executing
+    the older template before inserting a third evicts the middle one,
+    not the re-touched one."""
+    svc = QueryService(weather_db, cache_capacity=2)
+    check(svc.execute(ALL["Q4"]), oracle, "Q4")
+    check(svc.execute(ALL["Q2"]), oracle, "Q2")
+    check(svc.execute(ALL["Q4"]), oracle, "Q4")     # touch Q4
+    check(svc.execute(ALL["Q1"]), oracle, "Q1")     # evicts Q2
+    compiles = svc.stats.compiles
+    check(svc.execute(ALL["Q4"]), oracle, "Q4")     # still cached
+    assert svc.stats.compiles == compiles
+    check(svc.execute(ALL["Q2"]), oracle, "Q2")     # was evicted
+    assert svc.stats.compiles == compiles + 1
+
+
+def test_join_cap_bounds_probe_output(weather_db):
+    """A tiny join_cap overflows on its own flag — not the scan cap,
+    not the bucket width."""
+    ex = Executor(weather_db, ExecConfig(join_cap=2))
+    rs = ex.run(compile_query(ALL["Q6"]))
+    assert rs.overflow and rs.overflow_join_cap
+    assert not rs.overflow_scan and not rs.overflow_join
+
+
+def test_join_cap_regrows_to_exact(weather_db, oracle):
+    """The service regrows a saturated join_cap like a scan cap: the
+    result is exact and only join_cap grew."""
+    svc = QueryService(weather_db, ExecConfig(join_cap=2))
+    check(svc.execute(ALL["Q6"]), oracle, "Q6")
+    assert svc.stats.retries >= 1
+    caps = {c.join_cap for c in svc.cached_configs()}
+    assert len(caps) > 1 and 2 in caps
+    buckets = {c.join_bucket for c in svc.cached_configs()}
+    assert buckets == {4}, buckets   # bucket never inflated
+    # an adequate join_cap still yields exact results without retries
+    svc2 = QueryService(weather_db, ExecConfig(join_cap=max(
+        c for c in caps if c is not None)))
+    check(svc2.execute(ALL["Q6"]), oracle, "Q6")
+    assert svc2.stats.retries == 0

@@ -1,0 +1,55 @@
+"""Acceptance test for the prepared-query serving tier: the 64-variant
+Q1/Q2/Q3 workload compiles once per template (<= 3 total) instead of
+once per variant, with per-query results identical to unprepared
+execution. The full run is slow-marked (it compiles all 64 variants on
+the exact path for the parity oracle); scripts/ci.sh runs the same
+gate in smoke form (4 variants) via benchmarks/serving_benchmarks.py.
+"""
+import pytest
+
+from repro.core import QueryService
+from repro.core.workload import make_workload
+
+STATIONS = ["GHCND:USW00012836", "GHCND:USW00014771",
+            "GHCND:USW90000002", "GHCND:USW90000003",
+            "GHCND:USW90000004"]
+YEARS = (1976, 1999, 2000, 2001, 2003, 2004)
+
+
+@pytest.mark.slow
+def test_64_variant_workload_compiles_once_per_template(weather_db):
+    wl = make_workload(STATIONS, YEARS, total=64)
+    queries = [q for _, q in wl]
+    templates = {t for t, _ in wl}
+
+    # oracle: the exact-signature path (constants baked) — one compile
+    # per distinct variant
+    svc_exact = QueryService(weather_db, parameterize=False)
+    oracle = [svc_exact.execute(q) for q in queries]
+    assert svc_exact.stats.compiles == len(set(queries))
+
+    # prepared path: one compile per template
+    svc = QueryService(weather_db)
+    served = [svc.execute(q) for q in queries]
+    assert svc.stats.compiles <= len(templates) == 3
+    for a, b in zip(oracle, served):
+        assert a.rows() == b.rows()
+
+    # batch admission serves the same workload in <= 3 dispatches
+    svc_b = QueryService(weather_db)
+    batched = svc_b.execute_batch(queries)
+    assert svc_b.stats.compiles <= len(templates)
+    assert svc_b.stats.batches <= len(templates)
+    for a, b in zip(oracle, batched):
+        assert a.rows() == b.rows()
+
+
+def test_workload_smoke_shares_plans(weather_db):
+    """Default-loop guard: 9 variants, 3 templates, 3 compiles."""
+    wl = make_workload(STATIONS, YEARS, total=9)
+    svc = QueryService(weather_db)
+    for _, q in wl:
+        assert not svc.execute(q).overflow
+    assert svc.stats.compiles == 3
+    assert svc.cache_size() == 3
+    assert svc.stats.exact_misses == 9
