@@ -1,6 +1,8 @@
 """Benchmark orchestrator: one section per paper table/figure.
 
 ``PYTHONPATH=src python -m benchmarks.run [--quick]``
+``PYTHONPATH=src python -m benchmarks.run --suite groupby``  (the
+group-by serving workload, reproducible with one command)
 
 CSV rows: table,name,metric,value,derived. The roofline section reads
 the dry-run artifacts (run ``python -m repro.launch.dryrun --all``
@@ -12,6 +14,13 @@ import argparse
 import sys
 import traceback
 
+# named suites: shorthand for section subsets (--suite groupby ==
+# --only serving_groupby)
+SUITES = {
+    "groupby": ["serving_groupby"],
+    "serving": ["serving", "serving_groupby"],
+}
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
@@ -19,6 +28,8 @@ def main() -> None:
                     help="smaller sweeps (CI mode)")
     ap.add_argument("--only", default=None,
                     help="comma-separated section names")
+    ap.add_argument("--suite", default=None, choices=sorted(SUITES),
+                    help="named section subset")
     args = ap.parse_args()
 
     from benchmarks import lm_benchmarks, q_benchmarks, serving_benchmarks
@@ -51,13 +62,24 @@ def main() -> None:
             # keep the committed 64-variant record out of quick runs
             out_path=("BENCH_serving_smoke.json" if args.quick
                       else "BENCH_serving.json")),
+        "serving_groupby": lambda: serving_benchmarks.serving_groupby(
+            variants=8 if args.quick else 64,
+            repeats=1 if args.quick else 3,
+            smoke=args.quick,
+            out_path=("BENCH_serving_smoke.json" if args.quick
+                      else "BENCH_serving.json")),
         "ingest": q_benchmarks.ingest,
         "lm_train": lm_benchmarks.train_step_smoke,
         "lm_attention": lm_benchmarks.attention_impls,
         "lm_serve": lm_benchmarks.decode_throughput,
         "roofline": _roofline,
     }
-    chosen = (args.only.split(",") if args.only else list(sections))
+    if args.suite:
+        chosen = SUITES[args.suite]
+    elif args.only:
+        chosen = args.only.split(",")
+    else:
+        chosen = list(sections)
     print("table,name,metric,value,derived")
     failures = []
     for name in chosen:

@@ -1,12 +1,18 @@
-"""Serving-tier benchmark: compile-amortized QPS over a multi-tenant
-constant-variant workload (the prepared-query subsystem's payoff).
+"""Serving-tier benchmark: compile-amortized QPS over multi-tenant
+constant-variant workloads (the prepared-query subsystem's payoff).
 
-The workload is N constant-variants of the paper's Q1/Q2/Q3 templates
-(src/repro/core/workload.py). The old exact-signature path compiles
-every variant; the prepared path lifts constants into runtime
-parameters, so the whole workload compiles once per *template* (<= 3)
-and every further variant is a cache hit. Three serving modes are
-measured:
+Two suites share one record (BENCH_serving.json):
+
+  scan_join — N constant-variants of the paper's Q1/Q2/Q3 templates
+              (top-level keys, the PR-2 record)
+  groupby   — N constant-variants of the keyed-aggregation templates
+              (Q9d scan group-by with post-group division, Q10 HAVING
+              group-by, GQ6 Q6-style grouped join), recorded under
+              the "groupby" key — the statistics-sized segment space
+              means group-by queries presize, prepare and batch like
+              every other query class
+
+Three serving modes are measured per suite:
 
   exact     — parameterize=False QueryService (PR-1 behavior): one
               trace+XLA-compile per variant
@@ -15,23 +21,25 @@ measured:
               one device dispatch per template with stacked parameter
               vectors
 
-Results go to stdout as CSV rows and to BENCH_serving.json. The run
+Results go to stdout as CSV rows and to BENCH_serving.json. Each run
 doubles as a regression gate: it FAILS (non-zero exit) if the prepared
 path compiles more than once per template or any variant's result
 drifts from the exact path.
 
-  PYTHONPATH=src python -m benchmarks.serving_benchmarks           # 64 variants
-  PYTHONPATH=src python -m benchmarks.serving_benchmarks --smoke   # CI: 4, 1 repeat
+  PYTHONPATH=src python -m benchmarks.serving_benchmarks                    # 64 variants
+  PYTHONPATH=src python -m benchmarks.serving_benchmarks --suite groupby
+  PYTHONPATH=src python -m benchmarks.serving_benchmarks --smoke --suite all  # CI gate
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 
 from benchmarks.common import row
 from repro.core import QueryService
-from repro.core.workload import make_workload
+from repro.core.workload import make_groupby_workload, make_workload
 from repro.data.weather import WeatherSpec, build_database
 
 FULL_SPEC = WeatherSpec(num_stations=30,
@@ -47,13 +55,10 @@ def _timed_pass(serve_fn, queries) -> tuple[float, list]:
     return time.perf_counter() - t0, out
 
 
-def serving(variants: int = 64, repeats: int = 3,
-            out_path: str = "BENCH_serving.json",
-            smoke: bool = False) -> dict:
-    spec = SMOKE_SPEC if smoke else FULL_SPEC
-    db = build_database(spec, num_partitions=4)
-    stations = [spec.station_id(i) for i in range(spec.num_stations)]
-    wl = make_workload(stations, spec.years, total=variants)
+def _measure(db, wl, repeats: int, label: str, smoke: bool) -> dict:
+    """Exact vs prepared vs batched over one workload; CSV rows under
+    ``label``; gates (RuntimeError, so benchmarks/run.py's per-section
+    handler reports and continues) on compile sharing and parity."""
     queries = [q for _, q in wl]
     templates = sorted({t for t, _ in wl})
 
@@ -69,7 +74,7 @@ def serving(variants: int = 64, repeats: int = 3,
         lambda qs: [svc.execute(q) for q in qs], queries)
     compiles_prepared = svc.stats.compiles
 
-    # parity gate: prepared results must match the exact path
+    # parity gate: prepared results must match the exact path bitwise
     mismatches = [i for i, (a, b) in enumerate(zip(exact_rs, prep_rs))
                   if a.rows() != b.rows()]
 
@@ -112,34 +117,91 @@ def serving(variants: int = 64, repeats: int = 3,
         "cache_entries": svc.cache_size(),
         "result_mismatches": len(mismatches),
     }
+    if label == "serving_groupby":
+        # observability: the statistics-presized segment capacity vs
+        # the full-dictionary fallback it replaces
+        gcaps = [c.group_cap for c in svc.cached_configs()
+                 if c.group_cap is not None]
+        results["group_cap_presized"] = max(gcaps) if gcaps else -1
+        results["group_cap_dictionary"] = len(db.strings)
     for k, v in results.items():
         if isinstance(v, (int, float)):
-            row("serving", f"{n}var", k, float(v))
+            row(label, f"{n}var", k, float(v))
 
     # gates BEFORE the json write, so a regressed run never overwrites
-    # the committed good record; RuntimeError (not SystemExit) so
-    # benchmarks/run.py's per-section handler can report it and keep
-    # running the remaining sections
+    # the committed good record
     if compiles_prepared > len(templates):
         raise RuntimeError(
-            f"parameter-sharing regression: {compiles_prepared} "
-            f"compiles for {len(templates)} templates "
-            f"({n} variants)")
+            f"parameter-sharing regression ({label}): "
+            f"{compiles_prepared} compiles for {len(templates)} "
+            f"templates ({n} variants)")
     if mismatches:
         raise RuntimeError(
-            f"prepared/batched results drifted from exact path at "
-            f"variant indices {sorted(set(mismatches))[:8]}")
+            f"prepared/batched results drifted from exact path "
+            f"({label}) at variant indices "
+            f"{sorted(set(mismatches))[:8]}")
+    return results
+
+
+def _merge_record(out_path: str, section, results: dict) -> None:
+    """BENCH_serving.json holds both suites: scan_join at top level
+    (the PR-2 schema, preserved) and groupby under its own key; each
+    suite's write keeps the other's committed record."""
+    rec: dict = {}
+    if os.path.exists(out_path):
+        try:
+            with open(out_path) as f:
+                rec = json.load(f)
+        except (OSError, ValueError):
+            rec = {}
+    if section is None:
+        keep = rec.get("groupby")
+        rec = dict(results)
+        if keep is not None:
+            rec["groupby"] = keep
+    else:
+        rec[section] = results
     with open(out_path, "w") as f:
-        json.dump(results, f, indent=2, sort_keys=True)
+        json.dump(rec, f, indent=2, sort_keys=True)
         f.write("\n")
     print(f"# wrote {out_path}")
+
+
+def serving(variants: int = 64, repeats: int = 3,
+            out_path: str = "BENCH_serving.json",
+            smoke: bool = False) -> dict:
+    """The scan/join suite: Q1/Q2/Q3 constant-variants."""
+    spec = SMOKE_SPEC if smoke else FULL_SPEC
+    db = build_database(spec, num_partitions=4)
+    stations = [spec.station_id(i) for i in range(spec.num_stations)]
+    wl = make_workload(stations, spec.years, total=variants)
+    results = _measure(db, wl, repeats, "serving", smoke)
+    _merge_record(out_path, None, results)
     return results
+
+
+def serving_groupby(variants: int = 64, repeats: int = 3,
+                    out_path: str = "BENCH_serving.json",
+                    smoke: bool = False) -> dict:
+    """The keyed-aggregation suite: Q9d/Q10/GQ6 constant-variants —
+    group-by on the serving path, statistics-sized and batched."""
+    spec = SMOKE_SPEC if smoke else FULL_SPEC
+    db = build_database(spec, num_partitions=4)
+    wl = make_groupby_workload(spec.years, total=variants)
+    results = _measure(db, wl, repeats, "serving_groupby", smoke)
+    _merge_record(out_path, "groupby", results)
+    return results
+
+
+SUITES = {"scan_join": serving, "groupby": serving_groupby}
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="CI gate: 4 variants, 1 repeat, small data")
+    ap.add_argument("--suite", default="scan_join",
+                    choices=sorted(SUITES) + ["all"])
     ap.add_argument("--variants", type=int, default=None)
     ap.add_argument("--repeats", type=int, default=None)
     ap.add_argument("--out", default=None)
@@ -149,8 +211,10 @@ def main() -> None:
     out = args.out or ("BENCH_serving_smoke.json" if args.smoke
                        else "BENCH_serving.json")
     print("table,name,metric,value,derived")
-    serving(variants=variants, repeats=repeats, out_path=out,
-            smoke=args.smoke)
+    suites = sorted(SUITES) if args.suite == "all" else [args.suite]
+    for s in suites:
+        SUITES[s](variants=variants, repeats=repeats, out_path=out,
+                  smoke=args.smoke)
 
 
 if __name__ == "__main__":

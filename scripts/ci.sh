@@ -1,17 +1,25 @@
 #!/usr/bin/env bash
 # Tier-1 CI loop: the ROADMAP verify command plus timing report, then
-# the serving-benchmark smoke gate (4 variants, 1 repeat — fails fast
-# if prepared-query parameter sharing regresses to per-variant
-# compiles or results drift from the exact path; the full 64-variant
-# run lives in `python -m benchmarks.serving_benchmarks` / the
-# slow-marked test).
+# the serving-benchmark smoke gates — scan/join AND group-by workloads
+# (4 variants, 1 repeat each — fails fast if prepared-query parameter
+# sharing regresses to per-variant compiles or results drift from the
+# exact path; the full 64-variant runs live in
+# `python -m benchmarks.serving_benchmarks` / the slow-marked tests).
 #
-#   scripts/ci.sh              default loop (slow-marked smokes skipped)
-#   FULL=1 scripts/ci.sh       include slow-marked arch smoke tests
-#   scripts/ci.sh tests/...    any extra pytest args pass through
+#   scripts/ci.sh                 default loop (slow-marked smokes skipped)
+#   FULL=1 scripts/ci.sh          include slow-marked arch smoke tests
+#   scripts/ci.sh --differential  also run the differential-harness fast
+#                                 slice as its own stage (prepared/batch/
+#                                 regrowth bit-parity across queries.ALL)
+#   scripts/ci.sh tests/...       any extra pytest args pass through
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+DIFFERENTIAL=0
+if [ "${1:-}" = "--differential" ]; then
+    DIFFERENTIAL=1
+    shift
+fi
 MARK=()
 if [ "${FULL:-0}" = "1" ]; then
     MARK=(-m "slow or not slow")
@@ -19,4 +27,7 @@ fi
 # ${MARK[@]+...} keeps set -u happy on bash < 4.4 when MARK is empty
 python -m pytest -x -q --durations=10 \
     ${MARK[@]+"${MARK[@]}"} "$@"
-python -m benchmarks.serving_benchmarks --smoke
+python -m benchmarks.serving_benchmarks --smoke --suite all
+if [ "$DIFFERENTIAL" = "1" ]; then
+    python -m pytest -x -q tests/test_differential.py
+fi

@@ -323,6 +323,16 @@ def groupby_defined_vars(op: "GroupBy") -> tuple[int, ...]:
     return (op.key_var,) + tuple(v for v, _, _ in op.aggs)
 
 
+def defined_vars(op: Op) -> tuple[int, ...]:
+    """Every variable ``op`` defines — the multi-var generalization of
+    ``defined_var`` (GROUP-BY defines its key and one var per
+    aggregate)."""
+    if isinstance(op, GroupBy):
+        return groupby_defined_vars(op)
+    v = defined_var(op)
+    return () if v is None else (v,)
+
+
 def used_exprs(op: Op) -> tuple[Expr, ...]:
     if isinstance(op, (Assign, Unnest, Aggregate, Select)):
         return (op.expr,)

@@ -153,6 +153,20 @@ class MrqlLike:
             wrappers.append(body)
             body = body.child
 
+        # group-by plans: optional HAVING SELECTs directly above the
+        # GROUP-BY operator
+        having: list[A.Expr] = []
+        sel_body = body
+        while isinstance(sel_body, A.Select):
+            having.append(sel_body.expr)
+            sel_body = sel_body.child
+        if isinstance(sel_body, A.GroupBy):
+            if any(isinstance(o, A.Join) for o in A.walk(sel_body.child)):
+                raise NotImplementedError(
+                    "MrqlLike group-by maps are partition-local; a "
+                    "grouped join would need a join job first")
+            return self._run_groupby(plan, wrappers, having, sel_body, p)
+
         agg: Optional[A.Aggregate] = None
         if isinstance(body, A.Subplan):
             agg = body.plan
@@ -202,6 +216,110 @@ class MrqlLike:
         (var,) = plan.vars
         _, scale = self._resolve(wrappers, var)
         return MrqlResult([(total / scale,)], overflow, jobs=2)
+
+    def _run_groupby(self, plan, wrappers, having: list[A.Expr],
+                     gb: A.GroupBy, p) -> MrqlResult:
+        """Staged MapReduce group-by: map tasks emit flat (key sid,
+        values) records per partition (the shuffle write), one reducer
+        per key aggregates on the host, HAVING predicates run in the
+        reducer. Mirrors how MRQL lowers a group-by to a MapReduce
+        job — versus the executor's fused segmented-reduce + psum."""
+        shuffle: list[tuple] = []
+        overflow = False
+        agg_vals = [(v, fn, e) for v, fn, e in gb.aggs if fn != "count"]
+        for part in range(p):                     # map job
+            ev = ExprEval(self.db, self._tables_at(part))
+            tile = self.ex._eval(gb.child, ev, self.local_comm, None,
+                                 EvalCtx(self.config))
+            overflow |= bool(np.asarray(tile.overflow))
+            valid = np.asarray(tile.valid)
+            sid = np.asarray(ev.atom_sid(ev.eval(gb.key_expr,
+                                                 tile.cols)))
+            cols = {v: np.asarray(ev.atom_num(ev.eval(e, tile.cols)))
+                    for v, _, e in agg_vals}
+            ok = valid & (sid >= 0)
+            for r in np.nonzero(ok)[0]:
+                shuffle.append((int(sid[r]),
+                                {v: np.float32(cols[v][r])
+                                 for v in cols}))
+        groups: dict[int, list[dict]] = {}
+        for s, rec in shuffle:                    # reduce job
+            groups.setdefault(s, []).append(rec)
+        rows: list[tuple] = []
+        for s in sorted(groups):
+            recs = groups[s]
+            env: dict[int, Any] = {gb.key_var: self.db.strings.str(s)}
+            for v, fn, _ in gb.aggs:
+                if fn == "count":
+                    env[v] = float(len(recs))
+                    continue
+                vals = np.asarray([rec[v] for rec in recs], np.float32)
+                vals = vals[~np.isnan(vals)]
+                if fn == "sum":
+                    env[v] = float(vals.sum())
+                elif fn == "min":
+                    env[v] = float(vals.min()) if vals.size else np.inf
+                elif fn == "max":
+                    env[v] = float(vals.max()) if vals.size \
+                        else -np.inf
+                else:   # avg — executor semantics: sum over count
+                    env[v] = float(vals.sum()) / max(len(recs), 1)
+            if not all(self._host_ebv(h, env) for h in having):
+                continue
+            row = []
+            for v in plan.vars:
+                src, scale = self._resolve(wrappers, v)
+                if src not in env:
+                    raise NotImplementedError(
+                        "MrqlLike post-group wrappers support only "
+                        "iterate/divide shapes; cannot resolve "
+                        f"result var {v}")
+                x = env[src]
+                row.append(x / scale if isinstance(x, float)
+                           and scale != 1.0 else x)
+            rows.append(tuple(row))
+        return MrqlResult(rows, overflow, jobs=2)
+
+    def _host_ebv(self, e: A.Expr, env: dict) -> bool:
+        return bool(self._host_value(e, env))
+
+    def _host_value(self, e: A.Expr, env: dict):
+        """Reducer-side predicate evaluation over per-group values
+        (HAVING filters: comparisons/logic over key + aggregates)."""
+        if isinstance(e, A.Const):
+            if e.typ in ("double", "integer"):
+                return float(e.value)
+            if e.typ == "boolean":
+                return str(e.value) == "true"
+            return str(e.value)
+        if isinstance(e, A.Var):
+            return env[e.n]
+        assert isinstance(e, A.Call), e
+        if e.fn == "boolean":
+            return self._host_value(e.args[0], env)
+        if e.fn in ("and", "or"):
+            a = bool(self._host_value(e.args[0], env))
+            b = bool(self._host_value(e.args[1], env))
+            return (a and b) if e.fn == "and" else (a or b)
+        if e.fn == "not":
+            return not self._host_value(e.args[0], env)
+        import operator
+        cmps = {"value-eq": operator.eq, "value-ne": operator.ne,
+                "value-lt": operator.lt, "value-le": operator.le,
+                "value-gt": operator.gt, "value-ge": operator.ge,
+                "algebricks-eq": operator.eq}
+        if e.fn in cmps:
+            a = self._host_value(e.args[0], env)
+            b = self._host_value(e.args[1], env)
+            if isinstance(a, float) or isinstance(b, float):
+                return cmps[e.fn](float(a), float(b))
+            return cmps[e.fn](str(a), str(b))
+        ariths = {"add": operator.add, "subtract": operator.sub,
+                  "multiply": operator.mul, "divide": operator.truediv}
+        if e.fn in ariths:
+            return ariths[e.fn](float(self._host_value(e.args[0], env)),
+                                float(self._host_value(e.args[1], env)))
+        raise NotImplementedError(e.fn)
 
     @staticmethod
     def _combine(fn: str, partials) -> float:

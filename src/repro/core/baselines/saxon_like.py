@@ -116,6 +116,8 @@ class SaxonLike:
         if isinstance(ast, xq.Fn):
             return self._eval_fn(ast, env)
         if isinstance(ast, xq.Flwor):
+            if any(cl[0] == "groupby" for cl in ast.clauses):
+                return self._flwor_grouped(ast, env)
             return list(self._flwor(ast.clauses, 0, env, ast.ret))
         raise NotImplementedError(str(ast))
 
@@ -137,6 +139,106 @@ class SaxonLike:
                 yield from self._flwor(clauses, i + 1, env, ret)
         else:
             raise ValueError(cl)
+
+    # -- group-by (XQuery 3.0-lite; matches translator._group_by) -------------
+
+    _AGG_NAMES = ("count", "sum", "min", "max", "avg")
+
+    def _flwor_grouped(self, ast: xq.Flwor, env) -> list[Any]:
+        """FLWOR with a group-by clause: materialize the tuple stream
+        of the pre-group clauses, bucket by the key's *string value*
+        (the executor groups on dictionary sids — exact string
+        identity), then evaluate HAVING ``where`` clauses and return
+        items per group with aggregate-call semantics."""
+        idx = next(i for i, cl in enumerate(ast.clauses)
+                   if cl[0] == "groupby")
+        pre, (_, gname, key_ast) = ast.clauses[:idx], ast.clauses[idx]
+        post = ast.clauses[idx + 1:]
+        envs: list[dict] = []
+
+        def collect(i: int, e: dict) -> None:
+            if i == len(pre):
+                envs.append(e)
+                return
+            cl = pre[i]
+            if cl[0] == "for":
+                for item in self.eval(cl[2], e):
+                    collect(i + 1, {**e, cl[1]: item})
+            elif cl[0] == "let":
+                collect(i + 1, {**e, cl[1]: self.eval(cl[2], e)})
+            elif cl[0] == "where":
+                if self._ebv(self.eval(cl[1], e)):
+                    collect(i + 1, e)
+            else:
+                raise ValueError(cl)
+
+        collect(0, env)
+        groups: dict[str, list[dict]] = {}
+        for e in envs:
+            ks = self.eval(key_ast, e)
+            if not ks:
+                continue
+            k = self._key_str(ks[0])
+            if k is None:       # no string value -> no group (sid < 0)
+                continue
+            groups.setdefault(k, []).append(e)
+        items = (ast.ret.items if isinstance(ast.ret, xq.Seq)
+                 else (ast.ret,))
+        out: list[Any] = []
+        for k, members in groups.items():
+            genv = {**env, gname: k}
+            keep = True
+            for cl in post:
+                assert cl[0] == "where", cl
+                cond = self._agg_substitute(cl[1], members)
+                if not self._ebv(self.eval(cond, genv)):
+                    keep = False
+                    break
+            if not keep:
+                continue
+            for item in items:
+                out.extend(self.eval(
+                    self._agg_substitute(item, members), genv))
+        return out
+
+    def _key_str(self, item: Any) -> Any:
+        """Grouping key as the executor sees it: the node's dictionary
+        string (None when the node has no string value)."""
+        if isinstance(item, tuple) and len(item) == 3 \
+                and isinstance(item[0], str):
+            t = self._table(item)
+            sid = int(t.text_sid[item[2]])
+            return self.db.strings.str(sid) if sid >= 0 else None
+        return str(item)
+
+    def _agg_substitute(self, a: xq.Ast, members: list[dict]) -> xq.Ast:
+        """Replace aggregate calls with their per-group value (as a
+        literal) so the remaining expression evaluates normally in the
+        group environment."""
+        if isinstance(a, xq.Fn) and a.name in self._AGG_NAMES:
+            vals: list[Any] = []
+            for me in members:
+                vals.extend(self.eval(a.args[0], me))
+            vals = [self.atomize(x) for x in vals]
+            if a.name == "count":
+                return xq.Lit(float(len(vals)), "double")
+            nums = [self._num(v) for v in vals]
+            v = {"sum": sum(nums),
+                 "min": min(nums) if nums else float("nan"),
+                 "max": max(nums) if nums else float("nan"),
+                 "avg": (sum(nums) / len(nums)) if nums
+                 else float("nan")}[a.name]
+            return xq.Lit(float(v), "double")
+        if isinstance(a, xq.Bin):
+            return xq.Bin(a.op, self._agg_substitute(a.left, members),
+                          self._agg_substitute(a.right, members))
+        if isinstance(a, xq.Fn):
+            return xq.Fn(a.name, tuple(self._agg_substitute(x, members)
+                                       for x in a.args))
+        if isinstance(a, xq.Seq):
+            return xq.Seq(tuple(self._agg_substitute(x, members)
+                                for x in a.items))
+        return a
 
     def _ebv(self, seq: list) -> bool:
         if not seq:

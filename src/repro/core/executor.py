@@ -41,6 +41,8 @@ class ExecConfig:
     scan_cap: Optional[int] = None        # None: padded table size
     join_cap: Optional[int] = None        # probe-side output capacity
                                           # (None: uncompacted probe width)
+    group_cap: Optional[int] = None       # group-by segment capacity
+                                          # (None: full string dictionary)
     join_strategy: str = "broadcast"      # broadcast | repartition
     join_bucket: int = 4                  # hash-bucket probe width
     use_pallas_join: bool = False         # route probe through kernels/
@@ -48,22 +50,25 @@ class ExecConfig:
     def cap_key(self) -> tuple:
         """The fields that change compiled shapes/semantics — the
         plan-cache key component (service.py)."""
-        return (self.scan_cap, self.join_cap, self.join_strategy,
-                self.join_bucket, self.use_pallas_join)
+        return (self.scan_cap, self.join_cap, self.group_cap,
+                self.join_strategy, self.join_bucket,
+                self.use_pallas_join)
 
 
 @dataclasses.dataclass
 class EvalCtx:
     """Per-trace evaluation context: the active config plus per-stage
     overflow accumulators. Scan-cap overflow (DATASCAN/UNNEST fixed
-    capacity), join-bucket overflow (probe width) and join-cap overflow
-    (compacted probe-output capacity) are surfaced as separate output
+    capacity), join-bucket overflow (probe width), join-cap overflow
+    (compacted probe-output capacity) and group-cap overflow (keyed-
+    aggregation segment capacity) are surfaced as separate output
     flags so an adaptive layer can regrow exactly the capacity that
     saturated instead of inflating everything."""
     cfg: ExecConfig
     scan_ovf: list = dataclasses.field(default_factory=list)
     join_ovf: list = dataclasses.field(default_factory=list)
     joincap_ovf: list = dataclasses.field(default_factory=list)
+    group_ovf: list = dataclasses.field(default_factory=list)
 
 
 class Comm:
@@ -439,12 +444,44 @@ class Executor:
         strings, so the segment space is the string dictionary; the
         local step is a segmented reduce (the seg_aggregate Pallas
         kernel's job), the global step psums the [S] partials — rule
-        4.2.2 generalized from scalar to keyed form."""
+        4.2.2 generalized from scalar to keyed form.
+
+        ``group_cap`` bounds the segment space: instead of one slot
+        per dictionary string, the observed distinct key sids are
+        collected into a dense cap-sized segment dictionary (globally
+        consistent — built from the all-gathered key column, so every
+        partition agrees on the layout and the psum stays aligned).
+        A (cap+1)-th distinct key raises ``overflow_group_cap`` so the
+        service regrows exactly this capacity; at cap >= dictionary
+        size the full-dictionary layout is used, where overflow is
+        impossible by construction (the regrowth ceiling)."""
         t = self._eval(op.child, ev, comm, nts_input, ctx)
         key = ev.eval(op.key_expr, t.cols)
         sid = ev.atom_sid(key)
-        nseg = len(self.db.strings)
+        dict_size = len(self.db.strings)
         valid = t.valid & (sid >= 0)
+        cap = ctx.cfg.group_cap
+        if cap is not None and cap < dict_size:
+            # capped segment space: dense dynamic key dictionary
+            nseg = cap
+            big = jnp.int32(np.iinfo(np.int32).max)
+            gathered = comm.all_gather(jnp.where(valid, sid, big))
+            uniq = jnp.unique(gathered.reshape(-1), size=cap + 1,
+                              fill_value=big)
+            govf = uniq[cap] < big      # a (cap+1)-th distinct key
+            seg_keys = uniq[:cap]       # sorted ascending, big-padded
+            seg = jnp.clip(jnp.searchsorted(seg_keys, sid), 0,
+                           cap - 1).astype(I32)
+            valid = valid & (jnp.take(seg_keys, seg) == sid)
+            key_col = jnp.where(seg_keys == big, jnp.int32(-1),
+                                seg_keys)
+        else:
+            # full-dictionary segment space: one slot per string sid
+            nseg = dict_size
+            seg = sid
+            govf = jnp.zeros((), jnp.bool_)
+            key_col = jnp.arange(nseg, dtype=I32)
+        ctx.group_ovf.append(govf)
 
         def seg_sum_count(vals):
             if ctx.cfg.use_pallas_join:  # reuse the kernel toggle
@@ -455,33 +492,34 @@ class Executor:
                     if n % c == 0:
                         bn = c
                         break
-                return kops.segmented_sum_count(vals, sid, valid, nseg,
+                return kops.segmented_sum_count(vals, seg, valid, nseg,
                                                 block_n=bn)
             from repro.kernels import ref as kref
-            return kref.segmented_sum_count(vals, sid, valid, nseg)
+            return kref.segmented_sum_count(vals, seg, valid, nseg)
 
-        ones = jnp.ones(sid.shape, F32)
+        ones = jnp.ones(seg.shape, F32)
         _, counts = seg_sum_count(ones)
         g_counts = comm.psum(counts)
-        cols: dict[int, Col] = {
-            op.key_var: Col("str", jnp.arange(nseg, dtype=I32))}
+        cols: dict[int, Col] = {op.key_var: Col("str", key_col)}
         for var, fn, val_e in op.aggs:
             if fn == "count":
                 cols[var] = Col("num", g_counts)
                 continue
             v = ev.atom_num(ev.eval(val_e, t.cols))
-            v = jnp.where(valid & ~jnp.isnan(v), v, 0.0)
+            # NaN-valued rows are excluded from every aggregate value
+            # (count still counts them: avg = sum(non-NaN)/count(valid))
+            ok = valid & ~jnp.isnan(v)
             if fn in ("sum", "avg"):
-                sums, _ = seg_sum_count(v)
+                sums, _ = seg_sum_count(jnp.where(ok, v, 0.0))
                 g = comm.psum(sums)
                 if fn == "avg":
                     g = g / jnp.maximum(g_counts, 1.0)
                 cols[var] = Col("num", g)
             elif fn in ("min", "max"):
-                safe = jnp.clip(sid, 0, nseg - 1)
+                safe = jnp.clip(seg, 0, nseg - 1)
                 init = jnp.full((nseg,), jnp.inf if fn == "min"
                                 else -jnp.inf, F32)
-                vv = jnp.where(valid, v, jnp.inf if fn == "min"
+                vv = jnp.where(ok, v, jnp.inf if fn == "min"
                                else -jnp.inf)
                 local = (init.at[safe].min(vv) if fn == "min"
                          else init.at[safe].max(vv))
@@ -492,7 +530,7 @@ class Executor:
                 raise PlanError(f"group-by aggregate {fn}")
         central = comm.index() == 0
         out_valid = (g_counts > 0) & central
-        return Tile(cols, out_valid, t.overflow)
+        return Tile(cols, out_valid, t.overflow | govf)
 
     def _eval_unnest(self, op: A.Unnest, ev, comm, nts_input,
                      ctx: EvalCtx) -> Tile:
@@ -715,7 +753,9 @@ class Executor:
                                "overflow_scan": or_all(ctx.scan_ovf),
                                "overflow_join": or_all(ctx.join_ovf),
                                "overflow_join_cap":
-                                   or_all(ctx.joincap_ovf)}
+                                   or_all(ctx.joincap_ovf),
+                               "overflow_group_cap":
+                                   or_all(ctx.group_ovf)}
         for v in plan.vars:
             c = tile.cols[v]
             if c.kind == "node":
@@ -768,6 +808,8 @@ class ResultSet:
         self.overflow_join = bool(np.any(raw.get("overflow_join", False)))
         self.overflow_join_cap = bool(
             np.any(raw.get("overflow_join_cap", False)))
+        self.overflow_group_cap = bool(
+            np.any(raw.get("overflow_group_cap", False)))
 
     def rows(self) -> list[tuple]:
         assert isinstance(self.plan, A.DistributeResult)

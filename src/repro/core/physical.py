@@ -396,6 +396,19 @@ def estimate_scan_cap(db: xdm.Database, collection: str,
     return round_cap(bound)
 
 
+def estimate_group_cap(db: xdm.Database, tag: str) -> Optional[int]:
+    """Statistics-based segment capacity for a GROUP-BY whose key is
+    drawn from ``.../tag`` children: the build-time global distinct-
+    value count is an exact upper bound on the number of groups. Maxed
+    over collections (the key expression alone does not always name
+    its source collection); None when no statistics exist."""
+    stats = getattr(db, "stats", {})
+    if not stats:
+        return None
+    bounds = [s.group_key_bound(db.names, tag) for s in stats.values()]
+    return round_cap(max(bounds))
+
+
 def rows_from_mask(mask: jnp.ndarray, cap: int
                    ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """mask [N] -> (idx [cap], valid [cap], overflow). Row order is

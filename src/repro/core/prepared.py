@@ -28,6 +28,14 @@ Only *value* literals are lifted. Structural constants — element names
 under ``child``/``treat``, collection paths, type annotations — select
 columns and tables at trace time and must stay baked: lifting them
 would change which plan gets compiled, not which scalars flow in.
+
+Group-by templates lift like every other query class: literals inside
+GROUP-BY key/aggregate expressions, HAVING-style post-filters (the
+SELECTs the translator places above GROUP-BY — e.g. an aggregate
+threshold ``sum($r/value) ge 100``) and post-group arithmetic
+(``avg(..) div 10`` ASSIGNs) all reach the same comparison/arithmetic
+walk, so constant-variants of a keyed-aggregation template share one
+compiled executable and batch through ``execute_batch``.
 """
 from __future__ import annotations
 

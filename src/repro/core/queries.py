@@ -1,4 +1,7 @@
-"""The paper's eight benchmark queries (§5.2), verbatim."""
+"""The paper's eight benchmark queries (§5.2), verbatim — plus two
+group-by queries (Q9/Q10) on the paper's §6 'planned next step' (keyed
+aggregation), so every query class the serving tier supports has a
+canonical representative here."""
 
 Q1 = '''
 for $r in collection("/sensors")/dataCollection/data
@@ -81,8 +84,26 @@ avg(
 ) div 10
 '''
 
+Q9 = '''
+for $r in collection("/sensors")/dataCollection/data
+where $r/dataType eq "TMAX"
+group by $st := $r/station
+return ($st, count($r), avg($r/value))
+'''
+
+Q10 = '''
+for $r in collection("/sensors")/dataCollection/data
+where $r/dataType eq "PRCP"
+group by $st := $r/station
+where sum($r/value) ge 100
+return ($st, sum($r/value), max($r/value))
+'''
+
 ALL = {"Q1": Q1, "Q2": Q2, "Q3": Q3, "Q4": Q4,
-       "Q5": Q5, "Q6": Q6, "Q7": Q7, "Q8": Q8}
+       "Q5": Q5, "Q6": Q6, "Q7": Q7, "Q8": Q8,
+       "Q9": Q9, "Q10": Q10}
 
 SCALAR = ("Q3", "Q4", "Q7", "Q8")    # single-number results
 JOINS = ("Q5", "Q6", "Q7", "Q8")
+GROUPED = ("Q9", "Q10")              # keyed-aggregation results
+                                     # (float aggregate columns)

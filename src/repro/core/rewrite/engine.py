@@ -37,13 +37,18 @@ class Context:
 
     @classmethod
     def analyze(cls, root: Op) -> "Context":
-        from repro.core.algebra import defined_var, used_exprs
+        from repro.core.algebra import (DistributeResult, defined_vars,
+                                        used_exprs)
         use = var_use_counts(root)
         max_var = 0
         for op in walk(root):
-            v = defined_var(op)
-            if v:
-                max_var = max(max_var, v)
+            # defined_vars (not defined_var): GROUP-BY defines its key
+            # and aggregate vars, and DISTRIBUTE-RESULT's vars may be
+            # exactly those — missing either would let fresh() mint a
+            # colliding variable
+            max_var = max(max_var, *defined_vars(op), 0)
+            if isinstance(op, DistributeResult):
+                max_var = max(max_var, *op.vars, 0)
             for e in used_exprs(op):
                 max_var = max(max_var, max(free_vars(e), default=0))
         singleton: dict[int, bool] = {}

@@ -14,7 +14,8 @@ from typing import Optional
 from repro.core.algebra import (Aggregate, Assign, Call, Const, DataScan,
                                 EmptyTupleSource, Expr, Join, Op, Select,
                                 Some, Subplan, Unnest, Var, defined_var,
-                                fn_info, free_vars, substitute, walk)
+                                defined_vars, fn_info, free_vars,
+                                substitute, walk)
 from repro.core.rewrite.engine import Context
 
 TRUE = Const("true", "boolean")
@@ -55,9 +56,7 @@ def _child_chain(e: Expr) -> Optional[tuple[int, list[str]]]:
 def _defined_vars(op: Op) -> set[int]:
     out = set()
     for o in walk(op):
-        v = defined_var(o)
-        if v is not None:
-            out.add(v)
+        out.update(defined_vars(o))
     return out
 
 

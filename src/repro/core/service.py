@@ -42,16 +42,39 @@ to the ROADMAP's million-user north star — needs more, all here:
    geometrically (bounded by the padded table size, where overflow is
    impossible by construction); join-bucket overflow grows the bucket
    width; join-cap overflow (the compacted probe-output capacity) grows
-   ``join_cap`` the same way. Per-stage flags from the executor mean
-   only the saturated capacity is regrown, so caps stay tight and
-   padded compute stays low. Regrowth recompiles (new static shapes) —
-   but each grown variant lands in the cache, so a workload pays each
-   growth step once.
+   ``join_cap`` the same way; group-cap overflow (the keyed-aggregation
+   segment capacity) grows ``group_cap`` toward the full string
+   dictionary, its own impossible-overflow ceiling. Per-stage flags
+   from the executor mean only the saturated capacity is regrown, so
+   caps stay tight and padded compute stays low. Regrowth recompiles
+   (new static shapes) — but each grown variant lands in the cache, so
+   a workload pays each growth step once.
 
 5. **Statistics-based cap pre-sizing.** ``Database`` gathers per-tag
    node counts at build time; a child path ``/a/b/c`` can match at most
    ``count(tag == c)`` rows per partition, so first-shot caps are close
-   to right and the retry loop rarely fires at all.
+   to right and the retry loop rarely fires at all. Group-by segment
+   capacities come from per-tag *distinct-value* counts: a key
+   ``$r/c`` yields at most ``distinct(text of tag c)`` groups.
+
+Serving tier query coverage (core/queries.py; "preparable" = literals
+lift into a shared parameterized plan, "batchable" = stacked-parameter
+batched dispatch through ``execute_batch``):
+
+  =====  ==========================  ==========  =========
+  query  shape                       preparable  batchable
+  =====  ==========================  ==========  =========
+  Q1     scan + 4-predicate filter   yes         yes
+  Q2     scan + value filter         yes         yes
+  Q3     scalar agg (sum div)        yes         yes
+  Q4     scalar agg (max div)        yes         yes
+  Q5     hash join + quantifier      yes         yes
+  Q6     hash join, 3-col rows       yes         yes
+  Q7     join + scalar agg           yes         yes
+  Q8     self-join + scalar agg      yes         yes
+  Q9     keyed group-by aggs        yes         yes
+  Q10    group-by + HAVING filter    yes         yes
+  =====  ==========================  ==========  =========
 """
 from __future__ import annotations
 
@@ -63,7 +86,8 @@ from repro.core import algebra as A
 from repro.core import xdm
 from repro.core.executor import (CompiledPlan, ExecConfig, Executor,
                                  ResultSet)
-from repro.core.physical import estimate_scan_cap, round_cap
+from repro.core.physical import (estimate_group_cap, estimate_scan_cap,
+                                 round_cap)
 from repro.core.prepared import (PreparedQuery, bind_params, prepare_plan,
                                  stack_params)
 from repro.core.rewrite import optimize
@@ -165,6 +189,11 @@ class QueryService:
         # mean duplicate build keys (M:N join — unsupported), not hash
         # collisions, and regrowth cannot fix those
         self._bucket_ceiling = 64
+        # group_cap's ceiling: the full string dictionary (frozen by
+        # the executor's device_tables build above), where every
+        # possible key sid has its own segment slot and group-cap
+        # overflow is impossible by construction
+        self._group_ceiling = len(db.strings)
 
     # -- prepare -----------------------------------------------------------
 
@@ -241,10 +270,14 @@ class QueryService:
             self.stats.cache_hits += 1
             return cp
         self.stats.cache_misses += 1
-        self.stats.compiles += 1
         cp = self.executor.compile(plan, mode=self.mode, mesh=self.mesh,
                                    config=cfg, param_specs=param_specs,
                                    batch=batch)
+        # counted after the compile succeeds, so `stats.compiles` stays
+        # the exact mirror of `executor.compile_count` on every path —
+        # including regrowth-retry recompiles (scan / join_bucket /
+        # join_cap / group_cap), which tests pin as an invariant
+        self.stats.compiles += 1
         self._cache[key] = cp
         while len(self._cache) > self.cache_capacity:
             self._cache.popitem(last=False)
@@ -287,27 +320,65 @@ class QueryService:
 
     def _presized_config(self, plan: A.Op) -> ExecConfig:
         """First-shot ExecConfig from build-time statistics. Explicit
-        caps in the base config win; estimation failure (no stats, or
-        an unnest whose source collection is ambiguous) falls back to
-        the base config's padded-table behavior."""
+        caps in the base config win; estimation failure (no stats, an
+        unnest whose source collection is ambiguous, or a group-by key
+        that resolves to no statistics tag) falls back per-capacity to
+        the base config's safe behavior (padded table / full string
+        dictionary)."""
         cfg = self.base_config
-        if not self.presize or cfg.scan_cap is not None:
+        if not self.presize:
             return cfg
-        caps: list[int] = []
-        for op in A.walk(plan):
-            if isinstance(op, A.DataScan):
-                est = estimate_scan_cap(self.db, op.collection, op.path)
+        if cfg.scan_cap is None:
+            caps: list[int] = []
+            for op in A.walk(plan):
+                if isinstance(op, A.DataScan):
+                    est = estimate_scan_cap(self.db, op.collection,
+                                            op.path)
+                elif isinstance(op, A.Unnest):
+                    est = self._unnest_bound(op)
+                else:
+                    continue
                 if est is None:
-                    return cfg
+                    caps = []
+                    break
                 caps.append(est)
-            elif isinstance(op, A.Unnest):
-                est = self._unnest_bound(op)
-                if est is None:
-                    return cfg
-                caps.append(est)
-        if not caps:
-            return cfg
-        return dataclasses.replace(cfg, scan_cap=max(caps))
+            if caps:
+                cfg = dataclasses.replace(cfg, scan_cap=max(caps))
+        if cfg.group_cap is None:
+            gcap = self._group_bound(plan)
+            if gcap is not None:
+                cfg = dataclasses.replace(
+                    cfg, group_cap=min(gcap, self._group_ceiling))
+        return cfg
+
+    def _group_bound(self, plan: A.Op) -> Optional[int]:
+        """Segment capacity for every GROUP-BY in the plan: resolve
+        each key expression (through ASSIGN chains) to its child-chain
+        tag and take the build-time global distinct-value bound. None
+        when the plan has no GROUP-BY or any key is unresolvable (the
+        full-dictionary layout then keeps results exact)."""
+        gbs = [op for op in A.walk(plan) if isinstance(op, A.GroupBy)]
+        if not gbs:
+            return None
+        from repro.core.rewrite.parallel_rules import _child_chain
+        assigns = {op.var: op.expr for op in A.walk(plan)
+                   if isinstance(op, A.Assign)}
+        bounds: list[int] = []
+        for gb in gbs:
+            e = gb.key_expr
+            seen: set[int] = set()
+            while (isinstance(e, A.Var) and e.n in assigns
+                   and e.n not in seen):
+                seen.add(e.n)
+                e = assigns[e.n]
+            got = _child_chain(e) if isinstance(e, A.Call) else None
+            if got is None or not got[1]:
+                return None
+            est = estimate_group_cap(self.db, got[1][-1])
+            if est is None:
+                return None
+            bounds.append(est)
+        return max(bounds)
 
     def _unnest_bound(self, op: A.Unnest) -> Optional[int]:
         """Per-partition bound for an UNNEST child-chain: the chain's
@@ -350,10 +421,17 @@ class QueryService:
             if new_jcap > cfg.join_cap:
                 cfg = dataclasses.replace(cfg, join_cap=new_jcap)
                 grew = True
+        if rs.overflow_group_cap and cfg.group_cap is not None:
+            new_gcap = min(round_cap(cfg.group_cap * self.growth),
+                           self._group_ceiling)
+            if new_gcap > cfg.group_cap:
+                cfg = dataclasses.replace(cfg, group_cap=new_gcap)
+                grew = True
         if not grew:
             raise QueryOverflowError(
                 "overflow persists with capacities at their ceilings "
                 f"(scan_cap={cfg.scan_cap}, join_cap={cfg.join_cap}, "
+                f"group_cap={cfg.group_cap}, "
                 f"join_bucket={cfg.join_bucket}) — result would be "
                 "inexact")
         return cfg
@@ -390,7 +468,8 @@ class QueryService:
         raise QueryOverflowError(
             f"still overflowing after {self.max_retries} regrowth "
             f"retries (scan_cap={cfg.scan_cap}, "
-            f"join_cap={cfg.join_cap}, join_bucket={cfg.join_bucket})")
+            f"join_cap={cfg.join_cap}, group_cap={cfg.group_cap}, "
+            f"join_bucket={cfg.join_bucket})")
 
     # -- batch admission ---------------------------------------------------
 

@@ -195,7 +195,10 @@ class Translator:
         """Translate FLWOR clauses onto ``plan`` as a tuple stream;
         returns (plan, return-item vars)."""
         env = _Env(dict(env.vars), dict(env.node_valued))
-        for cl in ast.clauses:
+        for ci, cl in enumerate(ast.clauses):
+            if cl[0] == "groupby":
+                return self._group_by(cl, ast.clauses[ci + 1:], ast,
+                                      env, plan)
             if cl[0] == "for":
                 _, name, src = cl
                 plan, e, is_node = self.expr(src, env, plan)
@@ -217,8 +220,6 @@ class Translator:
             elif cl[0] == "where":
                 plan, e, _ = self.expr(cl[1], env, plan)
                 plan = Select(Call("boolean", (e,)), plan)
-            elif cl[0] == "groupby":
-                return self._group_by(cl, ast, env, plan)
             else:
                 raise ValueError(cl)
         # return clause
@@ -235,35 +236,79 @@ class Translator:
                 ret_vars.append(rv)
         return plan, ret_vars
 
-    def _group_by(self, cl, ast: xq.Flwor, env: _Env, plan: Op
-                  ) -> tuple[Op, list[int]]:
-        """XQuery 3.0-lite group-by (paper §6 future work): must be
-        the last clause; return items are the grouping key and
-        aggregate functions over per-tuple expressions. Lowered to the
-        keyed two-step GROUP-BY operator (segmented reduce locally,
-        psum globally — rule 4.2.2 generalized)."""
+    def _group_by(self, cl, rest: tuple, ast: xq.Flwor, env: _Env,
+                  plan: Op) -> tuple[Op, list[int]]:
+        """XQuery 3.0-lite group-by (paper §6 future work). Return
+        items — and any HAVING-style ``where`` clauses *after* the
+        group-by — are expressions over the grouping key and aggregate
+        functions of per-tuple expressions. Lowered to the keyed
+        two-step GROUP-BY operator (segmented reduce locally, psum
+        globally — rule 4.2.2 generalized), with post-group SELECTs
+        for the HAVING filters and post-group ASSIGNs for non-variable
+        return expressions (e.g. ``avg(..) div 10``)."""
         _, gname, key_ast = cl
         plan, key_e, _ = self.expr(key_ast, env, plan)
         key_var = self.new_var()
+        aggs: list[tuple[int, str, Expr]] = []
+        slots: dict[xq.Ast, int] = {}
+
+        def agg_slot(item: xq.Fn) -> int:
+            """One GROUP-BY aggregate slot per distinct (fn, arg) call
+            — shared between HAVING conditions and return items."""
+            nonlocal plan
+            if item in slots:
+                return slots[item]
+            plan, val_e, _ = self.expr(item.args[0], env, plan)
+            v = self.new_var()
+            aggs.append((v, item.name, val_e))
+            slots[item] = v
+            return v
+
+        def post(a: xq.Ast) -> Expr:
+            """Post-group expression: aggregate calls and the grouping
+            key become GROUP-BY output variables; scalar structure on
+            top stays expression-level."""
+            if isinstance(a, xq.Ref) and a.name == gname:
+                return Var(key_var)
+            if isinstance(a, xq.Fn) and a.name in _AGG_FNS:
+                return Var(agg_slot(a))
+            if isinstance(a, xq.Lit):
+                return Const(a.value, a.typ)
+            if isinstance(a, xq.Bin):
+                if a.op in ("and", "or"):
+                    return Call(a.op, (post(a.left), post(a.right)))
+                fn = _CMP.get(a.op) or _ARITH[a.op]
+                return Call(fn, (post(a.left), post(a.right)))
+            if isinstance(a, xq.Fn):
+                return Call(a.name, tuple(post(x) for x in a.args))
+            raise NotImplementedError(
+                "post-group expressions must be built from the "
+                f"grouping key and aggregates, got {a}")
+
+        havings: list[Expr] = []
+        for rc in rest:
+            if rc[0] != "where":
+                raise NotImplementedError(
+                    f"only where (HAVING) may follow group by, "
+                    f"got {rc[0]}")
+            havings.append(post(rc[1]))
         items = (ast.ret.items if isinstance(ast.ret, xq.Seq)
                  else (ast.ret,))
-        aggs: list[tuple[int, str, Expr]] = []
         ret_vars: list[int] = []
-        _AGGS = ("count", "sum", "min", "max", "avg")
+        deferred: list[tuple[int, Expr]] = []
         for item in items:
-            if isinstance(item, xq.Ref) and item.name == gname:
-                ret_vars.append(key_var)
-                continue
-            if isinstance(item, xq.Fn) and item.name in _AGGS:
-                plan, val_e, _ = self.expr(item.args[0], env, plan)
-                v = self.new_var()
-                aggs.append((v, item.name, val_e))
-                ret_vars.append(v)
-                continue
-            raise NotImplementedError(
-                "group-by return items must be the grouping key or "
-                f"aggregates, got {item}")
+            e = post(item)
+            if isinstance(e, Var):
+                ret_vars.append(e.n)
+            else:
+                rv = self.new_var()
+                deferred.append((rv, e))
+                ret_vars.append(rv)
         plan = GroupBy(key_var, key_e, tuple(aggs), plan)
+        for hv in havings:
+            plan = Select(Call("boolean", (hv,)), plan)
+        for rv, e in deferred:
+            plan = Assign(rv, e, plan)
         return plan, ret_vars
 
     # -- entry point -------------------------------------------------------

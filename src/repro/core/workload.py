@@ -1,16 +1,22 @@
-"""Multi-tenant serving workload: constant-variants of the paper's
-Q1/Q2/Q3 templates.
+"""Multi-tenant serving workloads: constant-variants of the paper's
+query templates (Q1-Q8) and the group-by templates (Q9/Q10 + a
+Q6-style grouped join).
 
 Every variant of one template parses and optimizes to the *same* plan
 shape — only the literals differ — so the prepared-query subsystem
 (prepared.py) erases them to one signature and the whole workload
 compiles once per template. This module is the shared source of those
-variants for tests (parameter-sharing regression coverage) and
-benchmarks (compile-amortized QPS in serving_benchmarks.py).
+variants for tests (parameter-sharing regression coverage, the
+differential harness's binding grids) and benchmarks
+(compile-amortized QPS in serving_benchmarks.py).
 """
 from __future__ import annotations
 
 from typing import Sequence
+
+DATES = ((12, 25), (7, 4), (12, 25), (7, 4))
+DTYPES = ("TMAX", "TMIN", "PRCP", "AWND", "SNOW")
+STATES = ("WASHINGTON", "FLORIDA", "NEW YORK", "CALIFORNIA", "TEXAS")
 
 
 def q1_variant(station: str, year: int, month: int, day: int) -> str:
@@ -50,6 +56,166 @@ sum(
 '''
 
 
+def q4_variant(datatype: str, divisor: int = 10) -> str:
+    """Q4 template: scaled maximum over one reading type."""
+    return f'''
+max(
+ for $r in collection("/sensors")/dataCollection/data
+ where $r/dataType eq "{datatype}"
+ return $r/value
+) div {divisor}
+'''
+
+
+def q5_variant(state: str, datestr: str) -> str:
+    """Q5 template: one state's readings on one timestamp."""
+    return f'''
+for $s in collection("/stations")/stationCollection/station
+for $r in collection("/sensors")/dataCollection/data
+where $s/id eq $r/station
+ and (some $x in $s/locationLabels satisfies (
+ $x/type eq "ST" and
+ upper-case(data($x/displayName)) eq "{state}"))
+ and dateTime(data($r/date))
+ eq dateTime("{datestr}")
+return $r
+'''
+
+
+def q6_variant(datatype: str, year: int) -> str:
+    """Q6 template: joined (name, date, value) rows for one year."""
+    return f'''
+for $s in collection("/stations")/stationCollection/station
+for $r in collection("/sensors")/dataCollection/data
+where $s/id eq $r/station
+ and $r/dataType eq "{datatype}"
+ and year-from-dateTime(dateTime(data($r/date))) eq {year}
+return ($s/displayName, $r/date, $r/value)
+'''
+
+
+def q7_variant(country: str, datatype: str, year: int,
+               divisor: int = 10) -> str:
+    """Q7 template: scaled yearly minimum over one country."""
+    return f'''
+min(
+ for $s in collection("/stations")/stationCollection/station
+ for $r in collection("/sensors")/dataCollection/data
+ where $s/id eq $r/station
+ and (some $x in $s/locationLabels satisfies
+ ($x/type eq "CNTRY" and $x/id eq "{country}"))
+ and $r/dataType eq "{datatype}"
+ and year-from-dateTime(dateTime(data($r/date))) eq {year}
+ return $r/value
+) div {divisor}
+'''
+
+
+def q8_variant(divisor: int = 10) -> str:
+    """Q8 template: scaled average min/max spread (self-join)."""
+    return f'''
+avg(
+ for $r_min in collection("/sensors_min")/dataCollection/data
+ for $r_max in collection("/sensors_max")/dataCollection/data
+ where $r_min/station eq $r_max/station
+ and $r_min/date eq $r_max/date
+ and $r_min/dataType eq "TMIN"
+ and $r_max/dataType eq "TMAX"
+ return $r_max/value - $r_min/value
+) div {divisor}
+'''
+
+
+def q9_variant(datatype: str) -> str:
+    """Q9 template: per-station keyed aggregation of one type."""
+    return f'''
+for $r in collection("/sensors")/dataCollection/data
+where $r/dataType eq "{datatype}"
+group by $st := $r/station
+return ($st, count($r), avg($r/value))
+'''
+
+
+def q9d_variant(datatype: str, divisor: int = 10) -> str:
+    """Q9 template with post-group arithmetic: the division lands in
+    an ASSIGN above the GROUP-BY operator and its literal lifts into
+    the parameter vector like any arithmetic literal."""
+    return f'''
+for $r in collection("/sensors")/dataCollection/data
+where $r/dataType eq "{datatype}"
+group by $st := $r/station
+return ($st, count($r), avg($r/value) div {divisor})
+'''
+
+
+def q10_variant(datatype: str, threshold: float) -> str:
+    """Q10 template: group-by with a HAVING-style post-filter (the
+    threshold literal lifts into the parameter vector like any
+    comparison literal)."""
+    return f'''
+for $r in collection("/sensors")/dataCollection/data
+where $r/dataType eq "{datatype}"
+group by $st := $r/station
+where sum($r/value) ge {threshold}
+return ($st, sum($r/value), max($r/value))
+'''
+
+
+def gq6_variant(datatype: str, year: int) -> str:
+    """Q6-style grouped join: per-station-name aggregation over the
+    stations-to-sensors hash join."""
+    return f'''
+for $s in collection("/stations")/stationCollection/station
+for $r in collection("/sensors")/dataCollection/data
+where $s/id eq $r/station
+ and $r/dataType eq "{datatype}"
+ and year-from-dateTime(dateTime(data($r/date))) eq {year}
+group by $name := $s/displayName
+return ($name, count($r), avg($r/value))
+'''
+
+
+def variant_grid(name: str, stations: Sequence[str],
+                 years: Sequence[int], n: int) -> list[str]:
+    """``n`` deterministic constant-variants of queries.ALL[name] —
+    the differential harness's binding grid. Constants cycle through
+    real data values (odometer-style, no RNG) so variants exercise the
+    value paths; mixed periods keep most variants textually distinct."""
+    ns, ny = len(stations), len(years)
+    out: list[str] = []
+    for k in range(n):
+        st, y = stations[k % ns], years[k % ny]
+        dt = DTYPES[k % len(DTYPES)]
+        if name == "Q1":
+            m, d = DATES[k % len(DATES)]
+            out.append(q1_variant(st, y, m, d))
+        elif name == "Q2":
+            out.append(q2_variant(dt, 50.0 + 13.5 * k))
+        elif name == "Q3":
+            out.append(q3_variant(st, ("PRCP", "TMAX", "TMIN")[k % 3],
+                                  y, 10 + k % 7))
+        elif name == "Q4":
+            out.append(q4_variant(dt, 10 + k % 9))
+        elif name == "Q5":
+            m, d = DATES[k % len(DATES)]
+            out.append(q5_variant(
+                STATES[k % len(STATES)],
+                f"{y}-{m:02d}-{d:02d}T00:00:00.000"))
+        elif name == "Q6":
+            out.append(q6_variant(dt, y))
+        elif name == "Q7":
+            out.append(q7_variant("FIPS:US", dt, y, 10 + k % 5))
+        elif name == "Q8":
+            out.append(q8_variant(10 + k % 11))
+        elif name == "Q9":
+            out.append(q9_variant(dt))
+        elif name == "Q10":
+            out.append(q10_variant(dt, 25.0 * (k % 8)))
+        else:
+            raise KeyError(name)
+    return out
+
+
 def make_workload(stations: Sequence[str],
                   years: Sequence[int],
                   total: int = 64) -> list[tuple[str, str]]:
@@ -86,4 +252,34 @@ def make_workload(stations: Sequence[str],
                                                     % len(q3_types)],
                 years[k3 % ny], 10 + (k3 % 7))))
             k3 += 1
+    return out
+
+
+def make_groupby_workload(years: Sequence[int], total: int = 64
+                          ) -> list[tuple[str, str]]:
+    """``total`` (template_name, query_text) pairs cycling through the
+    three group-by templates (scan group-by with post-group division
+    Q9d, HAVING group-by Q10, Q6-style grouped join GQ6) with rotating
+    constants — the keyed-aggregation counterpart of
+    ``make_workload``, textually distinct by the same odometer
+    construction."""
+    ny = len(years)
+    out: list[tuple[str, str]] = []
+    k9 = k10 = kj = 0
+    while len(out) < total:
+        t = len(out) % 3
+        if t == 0:
+            # threshold k-linear: distinct on its own
+            out.append(("Q10", q10_variant(
+                DTYPES[k10 % len(DTYPES)], 20.0 + 12.5 * k10)))
+            k10 += 1
+        elif t == 1:
+            out.append(("GQ6", gq6_variant(
+                DTYPES[kj % len(DTYPES)], years[(kj // len(DTYPES))
+                                                % ny])))
+            kj += 1
+        else:
+            out.append(("Q9d", q9d_variant(DTYPES[k9 % len(DTYPES)],
+                                           10 + k9 % 9)))
+            k9 += 1
     return out

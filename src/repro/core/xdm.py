@@ -128,6 +128,19 @@ class NodeTable:
         counts = np.bincount(ids)
         return {int(i): int(c) for i, c in enumerate(counts) if c > 0}
 
+    def tag_value_pairs(self) -> np.ndarray:
+        """Distinct (name id, text sid) pairs of this partition's
+        named nodes — the raw material for per-tag distinct-key
+        cardinality statistics (group-by segment pre-sizing: a key
+        ``$r/c`` has at most distinct(text of tag c) groups)."""
+        named = (self.kind == ELEMENT) | (self.kind == ATTRIBUTE)
+        mask = named & (self.name >= 0) & (self.text_sid >= 0)
+        if not np.any(mask):
+            return np.zeros((0, 2), np.int64)
+        pairs = np.stack([self.name[mask], self.text_sid[mask]],
+                         axis=1).astype(np.int64)
+        return np.unique(pairs, axis=0)
+
     def pad_to(self, n: int) -> "NodeTable":
         cur = self.num_nodes
         if cur == n:
@@ -280,10 +293,15 @@ class NameDict(StringDict):
 @dataclasses.dataclass
 class CollectionStats:
     """Build-time statistics for one collection: the executor runs one
-    local function per partition, so caps are *per-partition* — every
-    figure here is a max over partitions."""
+    local function per partition, so per-partition caps (scan/unnest)
+    are a max over partitions, while the group-by segment space is
+    global — ``tag_distinct`` counts distinct text values across ALL
+    partitions (a group exists once no matter how many partitions
+    contribute rows to it)."""
     max_nodes: int                  # largest unpadded partition
     tag_max: dict[int, int]         # name id -> max per-partition count
+    tag_distinct: dict[int, int] = dataclasses.field(
+        default_factory=dict)       # name id -> global distinct values
 
     def path_match_bound(self, names: "NameDict",
                          steps: tuple[str, ...]) -> Optional[int]:
@@ -299,15 +317,34 @@ class CollectionStats:
             return 0
         return self.tag_max.get(f, 0)
 
+    def group_key_bound(self, names: "NameDict", tag: str) -> int:
+        """Exact global distinct-value count for grouping keys drawn
+        from ``tag`` children: the number of group-by segments a key
+        ``.../tag`` can produce over this collection. 0 for a tag that
+        is absent (or valueless) here — it contributes no groups."""
+        f = names.lookup(tag)
+        if f < 0:
+            return 0
+        return self.tag_distinct.get(f, 0)
+
 
 def collection_stats(partitions: list["NodeTable"]) -> CollectionStats:
     tag_max: dict[int, int] = {}
     for t in partitions:
         for f, c in t.tag_counts().items():
             tag_max[f] = max(tag_max.get(f, 0), c)
+    # distinct text values per tag, global: union the per-partition
+    # (name, sid) pair sets before counting
+    all_pairs = [t.tag_value_pairs() for t in partitions]
+    pairs = np.unique(np.concatenate(all_pairs, axis=0), axis=0) \
+        if all_pairs else np.zeros((0, 2), np.int64)
+    tag_distinct: dict[int, int] = {}
+    if pairs.size:
+        tags, counts = np.unique(pairs[:, 0], return_counts=True)
+        tag_distinct = {int(f): int(c) for f, c in zip(tags, counts)}
     return CollectionStats(
         max_nodes=max(t.num_nodes for t in partitions),
-        tag_max=tag_max)
+        tag_max=tag_max, tag_distinct=tag_distinct)
 
 
 @dataclasses.dataclass

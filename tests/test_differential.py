@@ -1,0 +1,105 @@
+"""Differential test harness for the serving tier (DB fuzz-testing
+style): every query class in queries.ALL — group-by shapes included —
+is driven through a seeded grid of constant bindings and checked for
+**bit parity** across the engine's execution paths:
+
+  1. prepared-vs-baked: the parameterized shared-plan execution must
+     equal a fresh Executor run of the constants-baked plan, exactly
+     (floats compared with ==, not approx — the divide-by-Param
+     reciprocal mirror and the capped-segment layout exist to make
+     this hold).
+  2. batch-vs-per-request: ``execute_batch`` over the variant grid
+     must return, in order, exactly what per-request ``execute``
+     returns (grouped outputs pad the segment axis per batch and
+     compact per request).
+  3. tiny-cap-regrowth-vs-large-cap: a service seeded with absurdly
+     small capacities (scan 8 / join bucket 1 / join_cap 32 /
+     group_cap 2) must regrow to results identical to the
+     statistics-presized service.
+
+The unmarked fast subset keeps the default loop quick; the full
+>=20-case grid per query is slow-marked (scripts/ci.sh --differential
+runs the fast slice standalone)."""
+import pytest
+
+from repro.core import ExecConfig, Executor, QueryService, compile_query
+from repro.core.queries import ALL
+from repro.core.workload import variant_grid
+
+STATIONS = ["GHCND:USW00012836", "GHCND:USW00014771",
+            "GHCND:USW90000002", "GHCND:USW90000003",
+            "GHCND:USW90000004"]
+YEARS = (1976, 1999, 2000, 2001, 2003, 2004)
+FAST_N = 2      # unmarked slice: variants per query
+FULL_N = 20     # slow grid: >=20 seeded cases per query
+
+TINY = ExecConfig(scan_cap=8, join_bucket=1, join_cap=32, group_cap=2)
+
+
+def grid(name: str, n: int) -> list[str]:
+    return variant_grid(name, STATIONS, YEARS, n)
+
+
+@pytest.fixture(scope="module")
+def services(weather_db):
+    """Module-shared services so the parameter-erased plan cache (and
+    the tiny service's regrowth ladders) amortize across the grid —
+    exactly how a serving deployment would run the workload. The
+    "prepared" service doubles as the large-cap side of parity 3: its
+    statistics-presized caps ARE the large configuration."""
+    return {
+        "prepared": QueryService(weather_db),
+        "batch": QueryService(weather_db),
+        "tiny": QueryService(weather_db, TINY, presize=False),
+    }
+
+
+def _run_grid(weather_db, services, name, n):
+    texts = grid(name, n)
+    ex = Executor(weather_db)
+
+    # 1. prepared-vs-baked bit parity
+    prepared = [services["prepared"].execute(t) for t in texts]
+    for t, p in zip(texts, prepared):
+        assert not p.overflow
+        baked = ex.run(compile_query(t))
+        assert p.rows() == baked.rows(), (name, t)
+
+    # 2. batch-vs-per-request bit parity (order-preserving)
+    batched = services["batch"].execute_batch(texts)
+    assert len(batched) == len(prepared)
+    for p, b in zip(prepared, batched):
+        assert p.rows() == b.rows(), name
+
+    # 3. tiny-cap-regrowth-vs-large-cap bit parity (the prepared
+    # service's statistics-presized caps are the large side)
+    for t, p in zip(texts, prepared):
+        small = services["tiny"].execute(t)
+        assert not small.overflow
+        assert small.rows() == p.rows(), (name, t)
+    return texts
+
+
+@pytest.mark.parametrize("name", list(ALL))
+def test_differential_fast(weather_db, services, name):
+    _run_grid(weather_db, services, name, FAST_N)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", list(ALL))
+def test_differential_full_grid(weather_db, services, name):
+    texts = _run_grid(weather_db, services, name, FULL_N)
+    assert len(texts) >= 20
+
+
+@pytest.mark.slow
+def test_full_grid_compiles_once_per_template(weather_db):
+    """The acceptance gate in test form: a fresh service serving the
+    whole FULL_N grid of every template compiles once per *template*,
+    never per variant."""
+    svc = QueryService(weather_db)
+    for name in ALL:
+        for t in grid(name, FULL_N):
+            assert not svc.execute(t).overflow
+    assert svc.stats.compiles <= len(ALL)
+    assert svc.stats.executions == len(ALL) * FULL_N

@@ -73,6 +73,96 @@ def test_groupby_avg(weather_db):
         np.testing.assert_allclose(got[st], want[st], rtol=1e-5)
 
 
+HAVING_QUERY = '''
+for $r in collection("/sensors")/dataCollection/data
+where $r/dataType eq "TMAX"
+group by $st := $r/station
+where count($r) ge 2 and max($r/value) gt 200
+return ($st, count($r), max($r/value))
+'''
+
+
+def test_groupby_having_filters_groups(weather_db):
+    """HAVING-style where-after-group-by: groups failing the post-
+    aggregation predicate are dropped, surviving groups keep exact
+    aggregates."""
+    ex = Executor(weather_db)
+    rows = ex.run(compile_query(HAVING_QUERY)).rows()
+    want = expected_groups(weather_db, "TMAX", ("count", "max"))
+    kept = {st: v for st, v in want.items()
+            if v[0] >= 2 and v[1] > 200}
+    got = {st: (c, m) for st, c, m in rows}
+    assert set(got) == set(kept)
+    for st in kept:
+        np.testing.assert_allclose(got[st], kept[st], rtol=1e-5)
+
+
+def test_groupby_having_plan_shape():
+    """The post-filter lowers to SELECT above GROUP-BY, sharing one
+    aggregate slot per distinct (fn, arg) between HAVING and return."""
+    from repro.core.algebra import Select
+    plan = compile_query(HAVING_QUERY)
+    ops = list(walk(plan))
+    gbs = [o for o in ops if isinstance(o, GroupBy)]
+    assert len(gbs) == 1
+    # count/max appear once each even though HAVING and return both
+    # use them
+    assert sorted(fn for _, fn, _ in gbs[0].aggs) == ["count", "max"]
+    assert any(isinstance(o, Select) for o in ops)
+
+
+@pytest.mark.parametrize("cap", [2, 8, 16])
+def test_groupby_capped_segments_exact_or_flagged(weather_db, cap):
+    """group_cap below the distinct-key count must flag overflow
+    (never silently truncate); at or above it, results are bit-
+    identical to the full-dictionary layout."""
+    full = Executor(weather_db).run(compile_query(GB_QUERY))
+    capped = Executor(weather_db,
+                      ExecConfig(group_cap=cap)).run(
+        compile_query(GB_QUERY))
+    distinct = len(full.rows())
+    if cap < distinct:
+        assert capped.overflow and capped.overflow_group_cap
+    else:
+        assert not capped.overflow
+        assert capped.rows() == full.rows()
+
+
+def test_groupby_capped_pallas_parity(weather_db):
+    """The Pallas segmented-reduce path agrees with the jnp reference
+    on the capped segment layout."""
+    ref = Executor(weather_db,
+                   ExecConfig(group_cap=16)).run(compile_query(GB_QUERY))
+    pal = Executor(weather_db,
+                   ExecConfig(group_cap=16, use_pallas_join=True)).run(
+        compile_query(GB_QUERY))
+    assert pal.rows() == ref.rows()
+
+
+def test_groupby_minmax_skip_nonnumeric_values():
+    """A non-numeric value text atomizes to NaN: excluded from every
+    aggregate value (count still counts the row) — min/max must not
+    see it as 0.0."""
+    from repro.core import xdm
+    db = xdm.Database()
+    sh = xdm.Shredder(db.names, db.strings)
+    doc = sh.begin_document()
+    root = sh.element("dataCollection", doc)
+    for st, vals in (("A", ("5", "n/a")), ("B", ("-3", "n/a"))):
+        for v in vals:
+            d = sh.element("data", root)
+            sh.element("station", d, st)
+            sh.element("dataType", d, "TMAX")
+            sh.element("value", d, v)
+    sh.end_document()
+    db.add_collection("/sensors", [sh.finish()])
+    rows = Executor(db).run(compile_query(GB_QUERY)).rows()
+    got = {r[0]: r[1:] for r in rows}
+    assert got["A"] == (2.0, 5.0, 5.0)
+    # all-negative group: a NaN->0.0 leak would report max 0.0
+    assert got["B"] == (2.0, -3.0, -3.0)
+
+
 def test_groupby_partition_invariance():
     from repro.data.weather import WeatherSpec, build_database
     spec = WeatherSpec(num_stations=6, years=(2000, 2001),

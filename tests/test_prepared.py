@@ -8,8 +8,9 @@ from repro.core import (Executor, PreparedQuery, QueryService,
                         compile_query, lift_params)
 from repro.core import algebra as A
 from repro.core.queries import ALL, SCALAR
-from repro.core.workload import (make_workload, q1_variant, q2_variant,
-                                 q3_variant)
+from repro.core.workload import (gq6_variant, make_workload, q1_variant,
+                                 q2_variant, q3_variant, q9d_variant,
+                                 q10_variant)
 
 
 def _no_value_consts(plan: A.Op) -> bool:
@@ -195,6 +196,46 @@ def test_prepared_query_is_reusable_value(weather_db):
     assert svc.prepare(plan) is pq        # memoized by plan identity
 
 
+def test_groupby_variants_share_signature(weather_db):
+    """Group-by templates are first-class prepared workloads: literals
+    in the pre-group filter, the HAVING threshold and post-group
+    arithmetic all lift, so constant-variants share one compiled
+    executable."""
+    svc = QueryService(weather_db)
+    for make in ((lambda: q10_variant("TMAX", 50.0),
+                  lambda: q10_variant("PRCP", 125.0)),
+                 (lambda: q9d_variant("TMAX", 10),
+                  lambda: q9d_variant("TMIN", 13)),
+                 (lambda: gq6_variant("TMAX", 2000),
+                  lambda: gq6_variant("PRCP", 1999))):
+        a, b = make[0](), make[1]()
+        pa, pb = svc.prepare(a), svc.prepare(b)
+        assert pa.signature == pb.signature
+        assert pa.defaults != pb.defaults
+        assert pa.specs, a           # literals actually lifted
+        svc.execute(a)
+        compiles = svc.stats.compiles
+        rb = svc.execute(b)
+        assert svc.stats.compiles == compiles    # shared executable
+        assert rb.rows() == Executor(weather_db).run(
+            compile_query(b)).rows()             # bit parity
+
+
+def test_groupby_having_threshold_is_runtime_parameter(weather_db):
+    """Rebinding only the HAVING threshold changes which groups
+    survive without any recompilation."""
+    svc = QueryService(weather_db)
+    pq = svc.prepare(q10_variant("PRCP", 0.0))
+    low = svc.execute(pq)
+    compiles = svc.stats.compiles
+    # raise the threshold above every group's sum: same executable,
+    # empty result
+    hi = tuple(1e9 if v == 0.0 else v for v in pq.defaults)
+    none = svc.execute(pq, bindings=hi)
+    assert svc.stats.compiles == compiles
+    assert len(low.rows()) > 0 and none.rows() == []
+
+
 # -- batch admission ---------------------------------------------------------
 
 
@@ -232,6 +273,27 @@ def test_batch_with_explicit_bindings_and_singletons(weather_db):
     assert out[1].rows() == svc.execute(pq2, ("PRCP", 300.0)).rows()
     assert out[2].rows() == svc.execute(reqs[2]).rows()
     assert svc.stats.batches == 1        # only the Q2 pair batched
+
+
+def test_batch_grouped_outputs(weather_db):
+    """Grouped outputs batch: per-request distinct-key counts vary
+    inside one dispatch (the segment axis is padded per batch and
+    compacted per request), and results equal per-request execution
+    bitwise."""
+    svc_single = QueryService(weather_db)
+    svc_batch = QueryService(weather_db)
+    reqs = [q10_variant("TMAX", 50.0), q10_variant("PRCP", 1e9),
+            q10_variant("TMIN", -1e9), q10_variant("TMAX", 125.0)]
+    singles = [svc_single.execute(q) for q in reqs]
+    batched = svc_batch.execute_batch(reqs)
+    for s, b in zip(singles, batched):
+        assert s.rows() == b.rows()
+    # the 1e9-threshold request yields zero groups, its batchmates
+    # keep theirs — per-request compaction, one dispatch
+    assert batched[1].rows() == []
+    assert batched[0].rows() and batched[2].rows()
+    assert svc_batch.stats.batches == 1
+    assert svc_batch.stats.compiles == 1
 
 
 def test_batch_overflow_falls_back_to_exact(weather_db):

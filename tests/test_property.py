@@ -18,7 +18,7 @@ from hypothesis import HealthCheck, given, settings, strategies as st
 import jax.numpy as jnp
 
 from repro.core import Executor, compile_query
-from repro.core.algebra import defined_var, free_vars, used_exprs, walk
+from repro.core.algebra import defined_vars, free_vars, used_exprs, walk
 from repro.core.baselines import SaxonLike
 from repro.core.queries import ALL
 from repro.core.translator import translate
@@ -83,8 +83,7 @@ def test_rewrite_variable_hygiene(qname):
     plan = optimize(translate(ALL[qname]))
     defined: set[int] = set()
     for op in walk(plan):
-        v = defined_var(op)
-        if v is not None:
+        for v in defined_vars(op):   # GROUP-BY defines key + agg vars
             assert v not in defined, f"var {v} defined twice"
             defined.add(v)
     for op in walk(plan):

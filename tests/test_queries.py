@@ -1,9 +1,10 @@
-"""Q1-Q8 end-to-end differential: fused SPMD executor (both join
+"""Q1-Q10 end-to-end differential: fused SPMD executor (both join
 strategies, jnp + Pallas probes) vs the MRQL-style staged baseline vs
-the Saxon-style tree walker (§5.2)."""
+the Saxon-style tree walker (§5.2; Q9/Q10 are the §6 group-by
+shapes)."""
 import numpy as np
 import pytest
-from conftest import canon
+from conftest import canon, check_result
 
 from repro.core import ExecConfig, Executor, compile_query
 from repro.core.baselines import MrqlLike, SaxonLike
@@ -15,43 +16,31 @@ def test_executor_broadcast(weather_db, oracle, name):
     ex = Executor(weather_db)
     rs = ex.run(compile_query(ALL[name]))
     assert not rs.overflow
-    if name in SCALAR:
-        assert rs.scalar() == pytest.approx(oracle[name], rel=1e-3)
-    else:
-        assert canon(rs.rows()) == oracle[name]
+    check_result(rs, oracle, name)
 
 
 @pytest.mark.parametrize("name", list(ALL))
 def test_executor_repartition(weather_db, oracle, name):
-    """Repartition-vs-broadcast parity across all eight paper queries
+    """Repartition-vs-broadcast parity across all paper queries
     (join-free plans must be unaffected by the strategy flag)."""
     ex = Executor(weather_db, ExecConfig(join_strategy="repartition"))
     rs = ex.run(compile_query(ALL[name]))
     assert not rs.overflow
-    if name in SCALAR:
-        assert rs.scalar() == pytest.approx(oracle[name], rel=1e-3)
-    else:
-        assert canon(rs.rows()) == oracle[name]
+    check_result(rs, oracle, name)
 
 
-@pytest.mark.parametrize("name", ["Q5", "Q8"])
+@pytest.mark.parametrize("name", ["Q5", "Q8", "Q9"])
 def test_executor_pallas_join(weather_db, oracle, name):
     ex = Executor(weather_db, ExecConfig(use_pallas_join=True))
     rs = ex.run(compile_query(ALL[name]))
-    if name in SCALAR:
-        assert rs.scalar() == pytest.approx(oracle[name], rel=1e-3)
-    else:
-        assert canon(rs.rows()) == oracle[name]
+    check_result(rs, oracle, name)
 
 
 @pytest.mark.parametrize("name", list(ALL))
 def test_mrql_like(weather_db, oracle, name):
     mr = MrqlLike(weather_db)
     res = mr.run(compile_query(ALL[name]))
-    if name in SCALAR:
-        assert res.scalar() == pytest.approx(oracle[name], rel=1e-3)
-    else:
-        assert canon(res.rows()) == oracle[name]
+    check_result(res, oracle, name)
     assert res.jobs >= 1
 
 
@@ -101,3 +90,19 @@ def test_spmd_single_device(weather_db_small):
     sx = SaxonLike(db1)
     rs = ex.run(compile_query(ALL["Q4"]), mode="spmd", mesh=mesh)
     assert rs.scalar() == pytest.approx(sx.run(ALL["Q4"])[0], rel=1e-3)
+
+
+def test_spmd_grouped_capped_segments(weather_db_small):
+    """The capped segment dictionary (all_gather + unique) lowers
+    under shard_map too: spmd Q9 with a bounded group_cap equals the
+    sim-mode full-dictionary run bitwise."""
+    from repro import compat
+    mesh = compat.make_mesh((1,), ("data",))
+    from repro.data.weather import WeatherSpec, build_database
+    db1 = build_database(WeatherSpec(num_stations=5, years=(1976, 2000),
+                                     days_per_year=2), num_partitions=1)
+    want = Executor(db1).run(compile_query(ALL["Q9"])).rows()
+    ex = Executor(db1, ExecConfig(group_cap=16))
+    rs = ex.run(compile_query(ALL["Q9"]), mode="spmd", mesh=mesh)
+    assert not rs.overflow
+    assert rs.rows() == want

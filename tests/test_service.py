@@ -2,7 +2,7 @@
 regrowth, statistics-based cap pre-sizing (the adaptive layer that
 keeps results exact while caps stay tight)."""
 import pytest
-from conftest import canon
+from conftest import check_result
 
 from repro.core import (ExecConfig, Executor, QueryOverflowError,
                         QueryService, compile_query)
@@ -12,10 +12,7 @@ from repro.core.queries import ALL, SCALAR
 
 def check(rs, oracle, name):
     assert not rs.overflow
-    if name in SCALAR:
-        assert rs.scalar() == pytest.approx(oracle[name], rel=1e-3)
-    else:
-        assert canon(rs.rows()) == oracle[name]
+    check_result(rs, oracle, name)
 
 
 def true_scan_size(db, plan) -> int:
@@ -157,6 +154,80 @@ def test_lru_recency_order(weather_db, oracle):
     assert svc.stats.compiles == compiles
     check(svc.execute(ALL["Q2"]), oracle, "Q2")     # was evicted
     assert svc.stats.compiles == compiles + 1
+
+
+def test_group_cap_bounds_segment_space(weather_db):
+    """A tiny group_cap overflows on its own flag — not the scan cap,
+    not the join machinery."""
+    ex = Executor(weather_db, ExecConfig(group_cap=2))
+    rs = ex.run(compile_query(ALL["Q9"]))
+    assert rs.overflow and rs.overflow_group_cap
+    assert not rs.overflow_scan and not rs.overflow_join
+    assert not rs.overflow_join_cap
+
+
+@pytest.mark.parametrize("name", ["Q9", "Q10"])
+def test_group_cap_regrows_to_exact(weather_db, oracle, name):
+    """Started with group_cap=2 on a higher-cardinality key (8
+    stations), the regrowth ladder converges to an exact result, and
+    only group_cap grew."""
+    svc = QueryService(weather_db, ExecConfig(group_cap=2))
+    check(svc.execute(ALL[name]), oracle, name)
+    assert svc.stats.retries >= 1
+    gcaps = {c.group_cap for c in svc.cached_configs()}
+    assert len(gcaps) > 1 and 2 in gcaps
+    assert max(gcaps) <= svc._group_ceiling
+    buckets = {c.join_bucket for c in svc.cached_configs()}
+    assert buckets == {4}, buckets   # join machinery never inflated
+
+
+def test_group_regrowth_shares_plans_across_variants(weather_db):
+    """The regrowth ladder must ride the parameter-erased cache: a
+    second constant-variant of a regrown group-by template reuses both
+    the grown config (_good_cfg) and the compiled executable — zero
+    new compiles, no exact-signature fallback."""
+    svc = QueryService(weather_db, ExecConfig(group_cap=2))
+    svc.execute(ALL["Q9"])
+    assert svc.stats.retries >= 1
+    compiles = svc.stats.compiles
+    retries = svc.stats.retries
+    variant = ALL["Q9"].replace("TMAX", "TMIN")
+    rs = svc.execute(variant)
+    assert not rs.overflow and rs.rows()
+    assert svc.stats.compiles == compiles      # shared executable
+    assert svc.stats.retries == retries        # ladder skipped
+    assert svc.stats.cache_hits >= 1
+
+
+def test_presize_sizes_group_cap_from_statistics(weather_db, oracle):
+    """Build-time distinct-key statistics pre-size the segment space:
+    group-by queries run retry-free with a dictionary-independent
+    group_cap."""
+    svc = QueryService(weather_db)
+    for name in ("Q9", "Q10"):
+        check(svc.execute(ALL[name]), oracle, name)
+    assert svc.stats.retries == 0
+    gcaps = [c.group_cap for c in svc.cached_configs()]
+    assert all(g is not None and g < len(weather_db.strings)
+               for g in gcaps), gcaps
+
+
+def test_regrowth_recompiles_visible_in_stats(weather_db):
+    """Satellite fix: every regrowth-retry recompile — join_cap and
+    group_cap ladders included — must be counted in stats.compiles
+    (the exact mirror of the executor's compile_count), not just the
+    first compile of a template."""
+    svc = QueryService(weather_db, ExecConfig(join_cap=2))
+    svc.execute(ALL["Q6"])                      # join_cap ladder
+    assert svc.stats.retries >= 1
+    assert svc.stats.compiles == svc.executor.compile_count
+    assert svc.stats.compiles >= 2              # initial + regrowth
+
+    svc2 = QueryService(weather_db, ExecConfig(group_cap=2))
+    svc2.execute(ALL["Q9"])                     # group_cap ladder
+    assert svc2.stats.retries >= 1
+    assert svc2.stats.compiles == svc2.executor.compile_count
+    assert svc2.stats.compiles >= 2
 
 
 def test_join_cap_bounds_probe_output(weather_db):

@@ -8,7 +8,7 @@ gate in smoke form (4 variants) via benchmarks/serving_benchmarks.py.
 import pytest
 
 from repro.core import QueryService
-from repro.core.workload import make_workload
+from repro.core.workload import make_groupby_workload, make_workload
 
 STATIONS = ["GHCND:USW00012836", "GHCND:USW00014771",
             "GHCND:USW90000002", "GHCND:USW90000003",
@@ -53,3 +53,44 @@ def test_workload_smoke_shares_plans(weather_db):
     assert svc.stats.compiles == 3
     assert svc.cache_size() == 3
     assert svc.stats.exact_misses == 9
+
+
+@pytest.mark.slow
+def test_64_variant_groupby_workload_compiles_per_template(weather_db):
+    """The group-by acceptance gate: 64 keyed-aggregation variants
+    (scan group-by with post-group division, HAVING group-by, grouped
+    join) compile once per template — compile count bounded by
+    templates, not variants — with batched results bit-identical to
+    the exact path."""
+    wl = make_groupby_workload(YEARS, total=64)
+    queries = [q for _, q in wl]
+    templates = {t for t, _ in wl}
+    assert templates == {"Q9d", "Q10", "GQ6"}
+
+    svc_exact = QueryService(weather_db, parameterize=False)
+    oracle = [svc_exact.execute(q) for q in queries]
+    assert svc_exact.stats.compiles == len(set(queries))
+
+    svc = QueryService(weather_db)
+    served = [svc.execute(q) for q in queries]
+    assert svc.stats.compiles <= len(templates) == 3
+    for a, b in zip(oracle, served):
+        assert a.rows() == b.rows()
+
+    svc_b = QueryService(weather_db)
+    batched = svc_b.execute_batch(queries)
+    assert svc_b.stats.compiles <= len(templates)
+    assert svc_b.stats.batches <= len(templates)
+    for a, b in zip(oracle, batched):
+        assert a.rows() == b.rows()
+
+
+def test_groupby_workload_smoke_shares_plans(weather_db):
+    """Default-loop guard for the group-by suite: 9 variants, 3
+    templates, 3 compiles."""
+    wl = make_groupby_workload(YEARS, total=9)
+    svc = QueryService(weather_db)
+    for _, q in wl:
+        assert not svc.execute(q).overflow
+    assert svc.stats.compiles == 3
+    assert svc.cache_size() == 3
