@@ -18,7 +18,8 @@ import traceback
 # --only serving_groupby)
 SUITES = {
     "groupby": ["serving_groupby"],
-    "serving": ["serving", "serving_groupby"],
+    "multitenant": ["serving_multitenant"],
+    "serving": ["serving", "serving_groupby", "serving_multitenant"],
 }
 
 
@@ -68,6 +69,12 @@ def main() -> None:
             smoke=args.quick,
             out_path=("BENCH_serving_smoke.json" if args.quick
                       else "BENCH_serving.json")),
+        "serving_multitenant":
+            lambda: serving_benchmarks.serving_multitenant(
+                variants=8 if args.quick else 64,
+                smoke=args.quick,
+                out_path=("BENCH_serving_smoke.json" if args.quick
+                          else "BENCH_serving.json")),
         "ingest": q_benchmarks.ingest,
         "lm_train": lm_benchmarks.train_step_smoke,
         "lm_attention": lm_benchmarks.attention_impls,

@@ -1,16 +1,22 @@
 """Serving-tier benchmark: compile-amortized QPS over multi-tenant
 constant-variant workloads (the prepared-query subsystem's payoff).
 
-Two suites share one record (BENCH_serving.json):
+Three suites share one record (BENCH_serving.json):
 
-  scan_join — N constant-variants of the paper's Q1/Q2/Q3 templates
-              (top-level keys, the PR-2 record)
-  groupby   — N constant-variants of the keyed-aggregation templates
-              (Q9d scan group-by with post-group division, Q10 HAVING
-              group-by, GQ6 Q6-style grouped join), recorded under
-              the "groupby" key — the statistics-sized segment space
-              means group-by queries presize, prepare and batch like
-              every other query class
+  scan_join   — N constant-variants of the paper's Q1/Q2/Q3 templates
+                (top-level keys, the PR-2 record)
+  groupby     — N constant-variants of the keyed-aggregation templates
+                (Q9d scan group-by with post-group division, Q10 HAVING
+                group-by, GQ6 Q6-style grouped join), recorded under
+                the "groupby" key — the statistics-sized segment space
+                means group-by queries presize, prepare and batch like
+                every other query class
+  multitenant — open-loop Poisson traffic from three tenants with
+                skewed Q1-Q10 mixes through the async serving runtime
+                (SLO admission windows -> DRR fairness -> bucketed
+                batched dispatch), recorded under "multitenant":
+                p50/p99 latency, QPS, padding waste and compile counts
+                for pow2 vs cost-based bucketing
 
 Three serving modes are measured per suite:
 
@@ -34,12 +40,15 @@ from __future__ import annotations
 
 import argparse
 import json
+import math
 import os
 import time
 
 from benchmarks.common import row
 from repro.core import QueryService
-from repro.core.workload import make_groupby_workload, make_workload
+from repro.core.serving import CostBasedBucketing
+from repro.core.workload import (DEFAULT_TENANTS, make_groupby_workload,
+                                 make_tenant_traffic, make_workload)
 from repro.data.weather import WeatherSpec, build_database
 
 FULL_SPEC = WeatherSpec(num_stations=30,
@@ -143,10 +152,14 @@ def _measure(db, wl, repeats: int, label: str, smoke: bool) -> dict:
     return results
 
 
+SECTIONS = ("groupby", "multitenant")
+
+
 def _merge_record(out_path: str, section, results: dict) -> None:
-    """BENCH_serving.json holds both suites: scan_join at top level
-    (the PR-2 schema, preserved) and groupby under its own key; each
-    suite's write keeps the other's committed record."""
+    """BENCH_serving.json holds every suite: scan_join at top level
+    (the PR-2 schema, preserved) and the others under their own keys
+    (``SECTIONS``); each suite's write keeps the other suites'
+    committed records."""
     rec: dict = {}
     if os.path.exists(out_path):
         try:
@@ -155,10 +168,9 @@ def _merge_record(out_path: str, section, results: dict) -> None:
         except (OSError, ValueError):
             rec = {}
     if section is None:
-        keep = rec.get("groupby")
+        keep = {s: rec[s] for s in SECTIONS if s in rec}
         rec = dict(results)
-        if keep is not None:
-            rec["groupby"] = keep
+        rec.update(keep)
     else:
         rec[section] = results
     with open(out_path, "w") as f:
@@ -193,7 +205,147 @@ def serving_groupby(variants: int = 64, repeats: int = 3,
     return results
 
 
-SUITES = {"scan_join": serving, "groupby": serving_groupby}
+def _traffic_pass(svc, traffic, policy, *, window: float,
+                  max_fill: int, quantum: int):
+    """One open-loop replay of ``traffic`` through a fresh runtime on
+    ``svc``: submit every event at its virtual arrival time, drain to
+    quiescence. Returns (runtime, tickets, wall_seconds). The clock
+    stays purely virtual (measure_service_time=False) so admission
+    windows — and therefore group sizes, buckets and compiles — are
+    bit-reproducible across policies and machine speeds; latency
+    percentiles measure deterministic queueing delay, wall time
+    measures real throughput."""
+    rt = svc.runtime(window=window, max_fill=max_fill, quantum=quantum,
+                     policy=policy)
+    t0 = time.perf_counter()
+    for at, tenant, _, text in traffic:
+        rt.submit(text, tenant=tenant, at=at)
+    tickets = rt.drain()
+    wall = time.perf_counter() - t0
+    for t in tickets:
+        if t.error is not None:
+            raise RuntimeError(f"scheduled request failed: {t.error}")
+    return rt, tickets, wall
+
+
+def _pass_metrics(rt, tickets, wall, svc) -> dict:
+    lats = sorted(t.latency for t in tickets)
+
+    def pct(p):
+        # nearest-rank: p99 of <=100 samples is the 2nd-from-top
+        # order statistic boundary, not the maximum
+        return lats[max(0, math.ceil(p * len(lats)) - 1)]
+
+    return {
+        "p50_latency_vs": pct(0.50),
+        "p99_latency_vs": pct(0.99),
+        "qps": len(tickets) / wall,
+        "batches": rt.stats.batches,
+        "scalar_dispatches": rt.stats.scalar_dispatches,
+        "padded_slots": rt.stats.padded_slots,
+        "padded_rows": rt.stats.padded_rows,
+        "padding_waste": rt.stats.padding_waste,
+        "compiles_total": svc.stats.compiles,
+        "windows_deadline": rt.queue.closed_by_deadline,
+        "windows_fill": rt.queue.closed_by_fill,
+    }
+
+
+def serving_multitenant(variants: int = 64, repeats: int = 3,
+                        out_path: str = "BENCH_serving.json",
+                        smoke: bool = False) -> dict:
+    """The mixed-tenant async suite: open-loop Poisson traffic from
+    three tenants with skewed Q1-Q10 mixes, served through the
+    admission-window + DRR + bucketing runtime. Measures p50/p99
+    virtual latency, QPS, padding waste and compile counts for pow2 vs
+    cost-based bucketing; the cost ladder is trace-fitted from the
+    pow2 run's dispatch log (identical deterministic traffic), so the
+    comparison is equal-footing. Gates: scheduled results bit-match
+    direct per-request execution; outside smoke, cost-based bucketing
+    must cut padded rows >= 30% at an equal-or-lower compile count."""
+    del repeats   # both policies already run cold + warm passes
+    spec = SMOKE_SPEC if smoke else FULL_SPEC
+    db = build_database(spec, num_partitions=4)
+    stations = [spec.station_id(i) for i in range(spec.num_stations)]
+    traffic = make_tenant_traffic(DEFAULT_TENANTS, stations, spec.years,
+                                  total=variants, seed=7)
+    knobs = dict(window=2.0, max_fill=32, quantum=8)
+    label = "serving_multitenant"
+
+    # -- pow2 baseline: cold pass compiles, warm pass measures
+    svc_pow2 = QueryService(db)
+    _traffic_pass(svc_pow2, traffic, "pow2", **knobs)
+    rt_p, tickets_p, wall_p = _traffic_pass(svc_pow2, traffic, "pow2",
+                                            **knobs)
+    pow2 = _pass_metrics(rt_p, tickets_p, wall_p, svc_pow2)
+
+    # -- cost-based: ladder fitted offline from the pow2 dispatch log
+    # (the observed group-size mix per signature), then a fresh
+    # service serves the same traffic cold + warm
+    svc_cost = QueryService(db)
+    pow2_buckets: dict[str, set] = {}
+    for sig, _, bucket, _ in rt_p.dispatch_log:
+        pow2_buckets.setdefault(sig, set()).add(bucket)
+    policy = CostBasedBucketing(
+        compile_cost=1.0, frozen=True,
+        row_cost_for=svc_pow2.row_cost_for_signature,
+        # per-sig bucket budget == what pow2 spent on the same trace:
+        # compile count can only go down, padding only improves
+        max_buckets_for=lambda s: len(pow2_buckets.get(s, ())) or 1)
+    for sig, size, _, _ in rt_p.dispatch_log:
+        policy.preseed(sig, [size])
+    _traffic_pass(svc_cost, traffic, policy, **knobs)
+    rt_c, tickets_c, wall_c = _traffic_pass(svc_cost, traffic, policy,
+                                            **knobs)
+    cost = _pass_metrics(rt_c, tickets_c, wall_c, svc_cost)
+
+    # -- parity gate: scheduled == direct per-request, bit-exact
+    direct = [svc_pow2.execute(text) for _, _, _, text in traffic]
+    mismatches = [i for i, (d, p, c) in enumerate(
+        zip(direct, tickets_p, tickets_c))
+        if d.rows() != p.result.rows() or d.rows() != c.result.rows()]
+    if mismatches:
+        raise RuntimeError(
+            f"scheduled results drifted from direct execution at "
+            f"traffic indices {mismatches[:8]}")
+
+    reduction = (1.0 - cost["padded_rows"] / pow2["padded_rows"]
+                 if pow2["padded_rows"] else 0.0)
+    results = {
+        "requests": len(traffic),
+        "tenants": [t.name for t in DEFAULT_TENANTS],
+        "smoke": smoke,
+        "window_vs": knobs["window"],
+        "max_fill": knobs["max_fill"],
+        "quantum": knobs["quantum"],
+        "pow2": pow2,
+        "cost": cost,
+        "padded_rows_reduction": reduction,
+        "cost_policy_fallbacks": policy.fallbacks,
+        "result_mismatches": 0,
+    }
+    for pol, m in (("pow2", pow2), ("cost", cost)):
+        for k, v in m.items():
+            row(label, pol, k, float(v))
+    row(label, "vs", "padded_rows_reduction", reduction)
+
+    if not smoke:
+        # the tentpole's headline gate, checked BEFORE the json write
+        if reduction < 0.30:
+            raise RuntimeError(
+                f"cost-based bucketing only cut padded rows by "
+                f"{reduction:.1%} (< 30%) vs pow2")
+        if cost["compiles_total"] > pow2["compiles_total"]:
+            raise RuntimeError(
+                f"cost-based bucketing used more compiles "
+                f"({cost['compiles_total']}) than pow2 "
+                f"({pow2['compiles_total']})")
+    _merge_record(out_path, "multitenant", results)
+    return results
+
+
+SUITES = {"scan_join": serving, "groupby": serving_groupby,
+          "multitenant": serving_multitenant}
 
 
 def main() -> None:

@@ -1,25 +1,33 @@
 #!/usr/bin/env bash
 # Tier-1 CI loop: the ROADMAP verify command plus timing report, then
-# the serving-benchmark smoke gates — scan/join AND group-by workloads
-# (4 variants, 1 repeat each — fails fast if prepared-query parameter
-# sharing regresses to per-variant compiles or results drift from the
-# exact path; the full 64-variant runs live in
-# `python -m benchmarks.serving_benchmarks` / the slow-marked tests).
+# the serving-benchmark smoke gates — scan/join, group-by AND async
+# multi-tenant workloads (4 variants, 1 repeat each — fails fast if
+# prepared-query parameter sharing regresses to per-variant compiles
+# or results drift from the exact path; the full 64-variant runs live
+# in `python -m benchmarks.serving_benchmarks` / the slow-marked
+# tests).
 #
 #   scripts/ci.sh                 default loop (slow-marked smokes skipped)
 #   FULL=1 scripts/ci.sh          include slow-marked arch smoke tests
 #   scripts/ci.sh --differential  also run the differential-harness fast
 #                                 slice as its own stage (prepared/batch/
-#                                 regrowth bit-parity across queries.ALL)
+#                                 regrowth/scheduled bit-parity across
+#                                 queries.ALL)
+#   scripts/ci.sh --scheduler     also run the serving-runtime smoke
+#                                 stage standalone (admission/fairness/
+#                                 bucketing unit+property tests plus the
+#                                 4-variant multitenant benchmark gate)
 #   scripts/ci.sh tests/...       any extra pytest args pass through
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 DIFFERENTIAL=0
-if [ "${1:-}" = "--differential" ]; then
-    DIFFERENTIAL=1
+SCHEDULER=0
+while [ "${1:-}" = "--differential" ] || [ "${1:-}" = "--scheduler" ]; do
+    if [ "$1" = "--differential" ]; then DIFFERENTIAL=1; fi
+    if [ "$1" = "--scheduler" ]; then SCHEDULER=1; fi
     shift
-fi
+done
 MARK=()
 if [ "${FULL:-0}" = "1" ]; then
     MARK=(-m "slow or not slow")
@@ -30,4 +38,8 @@ python -m pytest -x -q --durations=10 \
 python -m benchmarks.serving_benchmarks --smoke --suite all
 if [ "$DIFFERENTIAL" = "1" ]; then
     python -m pytest -x -q tests/test_differential.py
+fi
+if [ "$SCHEDULER" = "1" ]; then
+    python -m pytest -x -q tests/test_scheduler.py
+    python -m benchmarks.serving_benchmarks --smoke --suite multitenant
 fi

@@ -11,6 +11,10 @@ from repro.core.prepared import (ParamSpec, PreparedQuery,  # noqa: F401
 from repro.core.rewrite import optimize  # noqa: F401
 from repro.core.service import (QueryOverflowError, QueryService,  # noqa: F401
                                 ServiceStats)
+from repro.core.serving import (AdmissionQueue,  # noqa: F401
+                                CostBasedBucketing, FairScheduler,
+                                Pow2Bucketing, ServingRuntime, Ticket,
+                                VirtualClock)
 from repro.core.translator import translate  # noqa: F401
 
 

@@ -288,9 +288,6 @@ class Executor:
             from jax.sharding import PartitionSpec as P
             from jax.experimental.shard_map import shard_map
 
-            if batch is not None:
-                raise NotImplementedError(
-                    "batched dispatch is sim-mode only for now")
             table_specs = {k: (jax.tree.map(lambda _: P(), v)
                                if k == "__derived__" else
                                jax.tree.map(lambda _: P(axis), v))
@@ -303,6 +300,17 @@ class Executor:
                 colls = {k: jax.tree.map(lambda a: a[0], v)
                          for k, v in tables.items() if k != "__derived__"}
                 colls["__derived__"] = der
+                if batch is not None:
+                    # batched dispatch under shard_map: the stacked
+                    # [B]-leading params arrive replicated on every
+                    # device (P() in_spec) and the batch vmap sits
+                    # OUTSIDE the mesh axis — collectives inside still
+                    # reduce over "data" only, so one dispatch serves
+                    # B bindings across all partitions. Outputs get
+                    # the partition axis back at position 1, matching
+                    # sim mode's [B, P, ...] layout.
+                    out = jax.vmap(lambda p: local(colls, p))(params)
+                    return jax.tree.map(lambda a: a[:, None], out)
                 return jax.tree.map(lambda a: a[None],
                                     local(colls, params))
 
@@ -312,8 +320,9 @@ class Executor:
                             tuple(P() for _ in param_specs))
             else:
                 in_specs = (table_specs,)
+            out_spec = P(None, axis) if batch is not None else P(axis)
             sm = shard_map(local_spmd, mesh=mesh, in_specs=in_specs,
-                           out_specs=P(axis), check_rep=False)
+                           out_specs=out_spec, check_rep=False)
             return CompiledPlan(jit(sm), schema, plan, cfg, mode,
                                 donated=donate, param_specs=param_specs,
                                 batch=batch)

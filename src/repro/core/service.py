@@ -34,8 +34,19 @@ to the ROADMAP's million-user north star — needs more, all here:
    requests by erased signature; each group becomes ONE device
    dispatch of a batch-compiled executable over stacked parameter
    vectors (executor ``batch=B``), padding to power-of-two buckets so
-   batched variants stay few. Overflow inside a batch falls back to
-   per-request execution, preserving exactness.
+   batched variants stay few. A batch that overflows is retried as
+   ONE regrown batch through the same ladder as scalar execution
+   (``serve_group``) — it is never unbatched, and stays exact.
+
+3b. **Async multi-tenant frontend.** ``submit()``/``drain()`` put the
+   serving/ runtime in front of everything above: requests from many
+   tenants accumulate in SLO-deadlined admission windows on a
+   deterministic virtual clock, a deficit-round-robin scheduler keeps
+   any one tenant from starving the rest, and a cost-based bucketing
+   policy (serving/bucketing.py) replaces blind pow2 padding with
+   ladders fitted to the observed group-size mix. The runtime decides
+   only *when* and *with whom* a request shares a dispatch — results
+   stay bit-identical to per-request ``execute``.
 
 4. **Overflow-driven capacity regrowth.** Results are *always exact*:
    if a run reports scan-cap overflow the scan capacity grows
@@ -59,26 +70,31 @@ to the ROADMAP's million-user north star — needs more, all here:
 
 Serving tier query coverage (core/queries.py; "preparable" = literals
 lift into a shared parameterized plan, "batchable" = stacked-parameter
-batched dispatch through ``execute_batch``):
+batched dispatch through ``execute_batch`` — since the serving runtime
+this includes batched dispatch under ``shard_map`` (mode="spmd":
+params replicated across the mesh, the batch vmap outside the mesh
+axis), "scheduled" = admitted/bucketed/dispatched by the async
+``submit()/drain()`` runtime with bit parity to direct execution):
 
-  =====  ==========================  ==========  =========
-  query  shape                       preparable  batchable
-  =====  ==========================  ==========  =========
-  Q1     scan + 4-predicate filter   yes         yes
-  Q2     scan + value filter         yes         yes
-  Q3     scalar agg (sum div)        yes         yes
-  Q4     scalar agg (max div)        yes         yes
-  Q5     hash join + quantifier      yes         yes
-  Q6     hash join, 3-col rows       yes         yes
-  Q7     join + scalar agg           yes         yes
-  Q8     self-join + scalar agg      yes         yes
-  Q9     keyed group-by aggs        yes         yes
-  Q10    group-by + HAVING filter    yes         yes
-  =====  ==========================  ==========  =========
+  =====  ==========================  ==========  =========  =========
+  query  shape                       preparable  batchable  scheduled
+  =====  ==========================  ==========  =========  =========
+  Q1     scan + 4-predicate filter   yes         yes        yes
+  Q2     scan + value filter         yes         yes        yes
+  Q3     scalar agg (sum div)        yes         yes        yes
+  Q4     scalar agg (max div)        yes         yes        yes
+  Q5     hash join + quantifier      yes         yes        yes
+  Q6     hash join, 3-col rows       yes         yes        yes
+  Q7     join + scalar agg           yes         yes        yes
+  Q8     self-join + scalar agg      yes         yes        yes
+  Q9     keyed group-by aggs        yes         yes        yes
+  Q10    group-by + HAVING filter    yes         yes        yes
+  =====  ==========================  ==========  =========  =========
 """
 from __future__ import annotations
 
 import dataclasses
+import types
 from collections import OrderedDict
 from typing import Optional, Sequence, Union
 
@@ -91,6 +107,7 @@ from repro.core.physical import (estimate_group_cap, estimate_scan_cap,
 from repro.core.prepared import (PreparedQuery, bind_params, prepare_plan,
                                  stack_params)
 from repro.core.rewrite import optimize
+from repro.core.serving.bucketing import next_pow2 as _next_pow2
 from repro.core.translator import translate
 
 Query = Union[str, A.Op, PreparedQuery]
@@ -139,9 +156,11 @@ class QueryService:
                  config: Optional[ExecConfig] = None, *,
                  mode: str = "sim", mesh=None, max_retries: int = 8,
                  growth: int = 4, presize: bool = True,
-                 cache_capacity: int = 64, parameterize: bool = True):
+                 cache_capacity: int = 64, parameterize: bool = True,
+                 binding_stats_capacity: int = 4096):
         assert growth > 1, "capacity growth must be geometric"
         assert cache_capacity >= 1
+        assert binding_stats_capacity >= 1
         self.db = db
         self.base_config = config or ExecConfig()
         self.mode = mode
@@ -157,9 +176,11 @@ class QueryService:
         self._cache: OrderedDict[tuple, CompiledPlan] = OrderedDict()
         # level-2, stats only: exact (signature, binding) -> hit count,
         # LRU-bounded like the plan cache (distinct bindings are
-        # user-cardinality — unbounded by nature)
+        # user-cardinality — unbounded by nature, so a long-running
+        # service must cap this or leak host memory; the capacity is a
+        # constructor knob for deployments with wide binding spaces)
         self._bindings: OrderedDict[tuple, int] = OrderedDict()
-        self._bindings_capacity = 4096
+        self._bindings_capacity = binding_stats_capacity
         # last config that produced an exact result, per erased
         # signature — repeats (and all constant-variants of a template)
         # skip the regrowth ladder, not just the compiles. Bounded like
@@ -194,6 +215,12 @@ class QueryService:
         # possible key sid has its own segment slot and group-cap
         # overflow is impossible by construction
         self._group_ceiling = len(db.strings)
+        # the async admission/scheduling runtime behind submit()/
+        # drain(), created lazily (or explicitly via runtime(...))
+        self._runtime = None
+        # signature -> per-request row cost (presized scan capacity),
+        # the padding-waste weight the bucketing policy reads
+        self._row_cost: OrderedDict[str, int] = OrderedDict()
 
     # -- prepare -----------------------------------------------------------
 
@@ -473,16 +500,62 @@ class QueryService:
 
     # -- batch admission ---------------------------------------------------
 
+    def serve_group(self, pq: PreparedQuery, values_list: Sequence,
+                    bucket: Optional[int] = None) -> list[ResultSet]:
+        """One same-signature admission group -> ONE batched device
+        dispatch, with **batched regrowth**: a batch that overflows is
+        retried as one regrown batch through the same capacity ladder
+        as scalar execution — it is never unbatched into per-request
+        executions. ``bucket`` is the padded batch width (default:
+        next power of two; the serving runtime passes cost-based
+        buckets instead). Works under vmap-sim AND shard_map (the
+        executor vmaps the batch axis outside the mesh axis)."""
+        assert pq.specs, "parameterless plans have nothing to stack"
+        sig = pq.signature
+        values_list = [tuple(v) for v in values_list]
+        bound = [bind_params(self.db, pq.specs, v) for v in values_list]
+        if bucket is None:
+            bucket = _next_pow2(len(bound))
+        assert bucket >= len(bound)
+        stacked = stack_params(bound, bucket)
+        cfg = (self._good_cfg.get(sig)
+               or self._presized_config(pq.plan))
+        for attempt in range(self.max_retries + 1):
+            cp = self.compiled(pq.plan, cfg, sig=sig,
+                               param_specs=pq.specs, batch=bucket)
+            rss = self.executor.run_compiled_batch(cp, stacked,
+                                                   len(bound))
+            self.stats.runs += 1
+            if not any(rs.overflow for rs in rss):
+                self._note_good_cfg(sig, cfg)
+                self.stats.executions += len(bound)
+                self.stats.batches += 1
+                self.stats.batched_requests += len(bound)
+                for v in values_list:
+                    self._note_binding(sig, v)
+                return rss
+            if attempt == self.max_retries:
+                break
+            cfg = self._grown_config(cfg, _merged_overflow(rss))
+            self.stats.retries += 1
+        raise QueryOverflowError(
+            f"batch still overflowing after {self.max_retries} "
+            f"regrowth retries (scan_cap={cfg.scan_cap}, "
+            f"join_cap={cfg.join_cap}, group_cap={cfg.group_cap}, "
+            f"join_bucket={cfg.join_bucket})")
+
     def execute_batch(self, requests: Sequence) -> list[ResultSet]:
         """Serve concurrent requests with one device dispatch per
         distinct plan shape. Each request is a query (text / plan /
         PreparedQuery) or a ``(query, bindings)`` pair. Requests
         sharing an erased signature are stacked into a batched
         executable (parameter vectors get a leading [B] axis, padded
-        to a power-of-two bucket); singleton or parameterless groups
-        go through the scalar path. Results keep request order and are
+        to a power-of-two bucket — the async runtime substitutes
+        cost-based buckets); singleton or parameterless groups go
+        through the scalar path. Results keep request order and are
         exactly what per-request ``execute`` would return — a batch
-        that overflows falls back to per-request regrowth."""
+        that overflows regrows and retries as one batch
+        (``serve_group``)."""
         norm: list[tuple[PreparedQuery, tuple]] = []
         for r in requests:
             q, b = r if isinstance(r, tuple) else (r, None)
@@ -494,41 +567,94 @@ class QueryService:
             groups.setdefault(pq.signature, []).append(i)
         for sig, idxs in groups.items():
             pq = norm[idxs[0]][0]
-            if len(idxs) == 1 or not pq.specs or self.mode != "sim":
-                # no batching win (or batched lowering unsupported):
-                # scalar path per request
+            if len(idxs) == 1 or not pq.specs:
+                # no batching win: scalar path per request
                 for i in idxs:
                     results[i] = self.execute(pq, norm[i][1])
                 continue
-            bound = [bind_params(self.db, pq.specs, norm[i][1])
-                     for i in idxs]
-            cfg = (self._good_cfg.get(sig)
-                   or self._presized_config(pq.plan))
-            bucket = _next_pow2(len(idxs))
-            cp = self.compiled(pq.plan, cfg, sig=sig,
-                               param_specs=pq.specs, batch=bucket)
-            rss = self.executor.run_compiled_batch(
-                cp, stack_params(bound, bucket), len(idxs))
-            self.stats.runs += 1
-            if any(rs.overflow for rs in rss):
-                # exactness first: re-serve the group through the
-                # regrowth path (the grown config lands in _good_cfg,
-                # so the next batch of this template dispatches once)
-                for i in idxs:
-                    results[i] = self.execute(pq, norm[i][1])
-                continue
-            self._note_good_cfg(sig, cfg)
-            self.stats.executions += len(idxs)
-            self.stats.batches += 1
-            self.stats.batched_requests += len(idxs)
+            rss = self.serve_group(pq, [norm[i][1] for i in idxs])
             for i, rs in zip(idxs, rss):
-                self._note_binding(sig, norm[i][1])
                 results[i] = rs
         return results
 
+    # -- async multi-tenant frontend ---------------------------------------
 
-def _next_pow2(n: int) -> int:
-    b = 1
-    while b < n:
-        b <<= 1
-    return b
+    def runtime(self, **kwargs):
+        """Create (replacing any existing) the serving/ runtime behind
+        ``submit()``/``drain()``: SLO-windowed admission on a virtual
+        clock, deficit-round-robin tenant fairness, cost-based batch
+        bucketing. Keyword arguments go to ``ServingRuntime`` (window,
+        max_fill, quantum, policy, clock, measure_service_time)."""
+        from repro.core.serving import ServingRuntime
+        if self._runtime is not None and (
+                len(self._runtime.queue)
+                or self._runtime.scheduler.backlog()):
+            raise RuntimeError(
+                "the current serving runtime still holds admitted, "
+                "undispatched requests; drain() before replacing it")
+        self._runtime = ServingRuntime(self, **kwargs)
+        return self._runtime
+
+    def submit(self, query: Query, bindings: Optional[Sequence] = None,
+               *, tenant: str = "default", at: Optional[float] = None,
+               slo: Optional[float] = None):
+        """Asynchronously admit one request into the serving runtime
+        (created with defaults on first use). Returns a ``Ticket``
+        whose ``result`` is filled by ``drain()``. ``at`` is the
+        request's virtual arrival time; ``tenant`` feeds cross-tenant
+        fairness."""
+        if self._runtime is None:
+            self.runtime()
+        return self._runtime.submit(query, bindings, tenant=tenant,
+                                    at=at, slo=slo)
+
+    def drain(self, budget: Optional[int] = None) -> list:
+        """Dispatch every admitted request to completion (closing
+        admission windows at their virtual deadlines) and return all
+        tickets in submission order."""
+        if self._runtime is None:
+            return []
+        return self._runtime.drain(budget)
+
+    # -- bucketing cost inputs ---------------------------------------------
+
+    def row_cost(self, pq: PreparedQuery) -> int:
+        """Per-request padded row cost of one signature: the
+        per-partition scan capacity of its CURRENT serving config
+        (every padded batch slot re-executes the plan over this many
+        rows). A known-good config — which regrowth keeps current — is
+        always read live so the cost tracks grown capacities; only the
+        statistics-presized first estimate is memoized (its plan walk
+        is the expensive part, and it never changes)."""
+        sig = pq.signature
+        good = self._good_cfg.get(sig)
+        if good is not None:
+            return good.scan_cap or self._scan_ceiling
+        cost = self._row_cost.get(sig)
+        if cost is None:
+            cfg = self._presized_config(pq.plan)
+            cost = cfg.scan_cap or self._scan_ceiling
+            self._row_cost[sig] = cost
+            while len(self._row_cost) > self._good_cfg_capacity:
+                self._row_cost.popitem(last=False)
+        return cost
+
+    def row_cost_for_signature(self, sig: str) -> int:
+        """Signature-keyed row cost for the bucketing policy: the
+        live known-good config when one exists, else the memoized
+        presized estimate, else the scan ceiling."""
+        good = self._good_cfg.get(sig)
+        if good is not None:
+            return good.scan_cap or self._scan_ceiling
+        return self._row_cost.get(sig, self._scan_ceiling)
+
+
+def _merged_overflow(rss: Sequence[ResultSet]):
+    """The union of per-stage overflow flags across one batch — what
+    the regrowth ladder reads to grow exactly the saturated capacity
+    for the whole batch at once."""
+    return types.SimpleNamespace(
+        overflow_scan=any(rs.overflow_scan for rs in rss),
+        overflow_join=any(rs.overflow_join for rs in rss),
+        overflow_join_cap=any(rs.overflow_join_cap for rs in rss),
+        overflow_group_cap=any(rs.overflow_group_cap for rs in rss))

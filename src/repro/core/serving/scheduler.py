@@ -1,0 +1,244 @@
+"""Fair cross-tenant dispatch and the serving runtime.
+
+``FairScheduler`` is a deficit round-robin: each tenant owns a FIFO of
+admitted tickets and a deficit counter topped up by ``quantum`` every
+round it has backlog. A flooding tenant cannot starve a light one —
+while both have backlog, per-round service differs by at most one
+quantum (the property test in tests/test_scheduler.py pins this under
+an adversarial arrival mix).
+
+``ServingRuntime`` glues the pieces into the asynchronous frontend
+``QueryService.submit()/drain()`` exposes:
+
+    submit --> AdmissionQueue (SLO windows, virtual clock)
+           --> FairScheduler (deficit round-robin across tenants)
+           --> group by erased signature
+           --> bucketing policy (cost-based or pow2)
+           --> QueryService.serve_group (ONE batched dispatch per
+               signature group, batched regrowth on overflow)
+
+Results are exactness-preserving and bit-identical to direct
+per-request ``execute`` — the runtime only decides *when* and *with
+whom* a request shares a dispatch, never how it is computed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict, deque
+from typing import Optional
+
+from repro.core.serving.bucketing import make_policy
+from repro.core.serving.queue import AdmissionQueue, Ticket, VirtualClock
+
+
+class FairScheduler:
+    """Deficit round-robin over tenants (credits in requests)."""
+
+    def __init__(self, quantum: int = 4):
+        assert quantum >= 1
+        self.quantum = quantum
+        self._queues: "OrderedDict[str, deque[Ticket]]" = OrderedDict()
+        self._deficit: dict[str, float] = {}
+        self.served: dict[str, int] = {}
+
+    def offer(self, tickets: list[Ticket]) -> None:
+        for t in tickets:
+            self._queues.setdefault(t.tenant, deque()).append(t)
+
+    def backlog(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    def select(self, budget: Optional[int] = None) -> list[Ticket]:
+        """One DRR sweep: every backlogged tenant earns a quantum,
+        then spends its deficit FIFO. ``budget`` caps total picks per
+        sweep (None: one full round). Tenants that drain give their
+        leftover credit up — deficit resets on empty, so idle tenants
+        cannot hoard service."""
+        picked: list[Ticket] = []
+        active = [t for t, q in self._queues.items() if q]
+        for tenant in active:
+            self._deficit[tenant] = self._deficit.get(tenant, 0.0) \
+                + self.quantum
+        for tenant in active:
+            q = self._queues[tenant]
+            while q and self._deficit[tenant] >= 1 and (
+                    budget is None or len(picked) < budget):
+                picked.append(q.popleft())
+                self._deficit[tenant] -= 1
+                self.served[tenant] = self.served.get(tenant, 0) + 1
+            if not q:
+                self._deficit[tenant] = 0.0
+        return picked
+
+
+@dataclasses.dataclass
+class RuntimeStats:
+    submitted: int = 0
+    dispatched: int = 0         # requests that completed
+    batches: int = 0            # grouped device dispatches
+    scalar_dispatches: int = 0  # singleton / parameterless requests
+    padded_slots: int = 0       # phantom batch slots executed
+    padded_rows: int = 0        # phantom slots x per-request row cost
+    real_rows: int = 0          # real slots x per-request row cost
+    steps: int = 0              # scheduler sweeps
+    slo_misses: int = 0         # tickets completed past their deadline
+
+    @property
+    def padding_waste(self) -> float:
+        """Fraction of executed rows that were phantom padding."""
+        total = self.padded_rows + self.real_rows
+        return self.padded_rows / total if total else 0.0
+
+
+class ServingRuntime:
+    """The admission-and-scheduling loop in front of a QueryService.
+
+    Deterministic by construction: all scheduling decisions read the
+    virtual clock, which advances from submitted arrival timestamps
+    and (only when ``measure_service_time=True``, the benchmark mode)
+    from measured dispatch durations. ``window`` is the admission
+    share of the latency SLO.
+    """
+
+    def __init__(self, service, *, window: float = 1.0,
+                 max_fill: int = 16, quantum: int = 4,
+                 policy=None, clock: Optional[VirtualClock] = None,
+                 measure_service_time: bool = False):
+        self.service = service
+        self.clock = clock or VirtualClock()
+        self.queue = AdmissionQueue(self.clock, window=window,
+                                    max_fill=max_fill)
+        self.scheduler = FairScheduler(quantum=quantum)
+        if policy is None:
+            policy = "cost"
+        if isinstance(policy, str):
+            kw = ({} if policy == "pow2" else
+                  {"row_cost_for": service.row_cost_for_signature})
+            policy = make_policy(policy, **kw)
+        self.policy = policy
+        self.measure_service_time = measure_service_time
+        self.stats = RuntimeStats()
+        self._tickets: list[Ticket] = []
+        # (sig, group_size, bucket, row_cost) per batched dispatch —
+        # the trace a CostBasedBucketing ladder can be fitted from
+        # offline (benchmarks/serving_benchmarks.py)
+        self.dispatch_log: list[tuple[str, int, int, int]] = []
+
+    # -- frontend ----------------------------------------------------------
+
+    def submit(self, query, bindings=None, *, tenant: str = "default",
+               at: Optional[float] = None, slo: Optional[float] = None
+               ) -> Ticket:
+        """Admit one request. ``at`` is its virtual arrival time
+        (advancing the clock — open-loop traffic submits in timestamp
+        order); ``slo`` overrides the ticket's latency deadline
+        (default: admission window + one window of dispatch budget).
+        Preparation happens here so admission groups by erased
+        signature, not query text."""
+        if at is not None:
+            # an arrival that crosses pending window deadlines closes
+            # and dispatches them AT those deadlines first — the clock
+            # must never jump a window past its own close time (that
+            # would bill the gap to the next arrival as queueing
+            # latency and batch requests the SLO never allowed
+            # together)
+            nxt = self.queue.next_close()
+            while nxt is not None and nxt < at:
+                self.clock.advance_to(nxt)
+                self.step()
+                nxt = self.queue.next_close()
+            self.clock.advance_to(at)
+        now = self.clock.now()
+        pq = self.service.prepare(query)
+        values = self.service._values_for(pq, bindings)
+        deadline = now + (slo if slo is not None
+                          else 2.0 * self.queue.window)
+        t = Ticket(seq=len(self._tickets), tenant=tenant, query=pq,
+                   values=values, arrival=now, deadline=deadline)
+        self._tickets.append(t)
+        self.queue.submit(t)
+        self.stats.submitted += 1
+        # open-loop semantics: submitting IS the passage of time, so
+        # windows whose deadline this arrival crossed dispatch now —
+        # not at some eventual drain (which would inflate their
+        # latency by the remaining traffic horizon)
+        self.step()
+        return t
+
+    # -- dispatch ----------------------------------------------------------
+
+    def step(self, budget: Optional[int] = None) -> int:
+        """Close due windows, run one DRR sweep, dispatch the picked
+        tickets grouped by signature. Returns tickets completed."""
+        self.scheduler.offer(self.queue.pop_due())
+        picked = self.scheduler.select(budget)
+        if not picked:
+            return 0
+        self.stats.steps += 1
+        groups: "OrderedDict[str, list[Ticket]]" = OrderedDict()
+        for t in picked:
+            groups.setdefault(t.query.signature, []).append(t)
+        done = 0
+        for sig, tickets in groups.items():
+            done += self._dispatch(sig, tickets)
+        return done
+
+    def _dispatch(self, sig: str, tickets: list[Ticket]) -> int:
+        svc = self.service
+        pq = tickets[0].query
+        row_cost = svc.row_cost(pq)
+        t0 = time.perf_counter() if self.measure_service_time else 0.0
+        try:
+            if len(tickets) == 1 or not pq.specs:
+                for t in tickets:
+                    t.result = svc.execute(t.query, t.values)
+                self.stats.scalar_dispatches += len(tickets)
+            else:
+                size = len(tickets)
+                # decide with what the policy knows, THEN learn: the
+                # fitted ladder only ever serves later windows, so a
+                # cold signature pads pow2 instead of compiling a
+                # bucket bespoke to its first group
+                bucket = self.policy.bucket_for(sig, size)
+                self.policy.observe(sig, size)
+                rss = svc.serve_group(
+                    pq, [t.values for t in tickets], bucket=bucket)
+                for t, rs in zip(tickets, rss):
+                    t.result = rs
+                self.stats.batches += 1
+                self.stats.padded_slots += bucket - size
+                self.stats.padded_rows += (bucket - size) * row_cost
+                self.dispatch_log.append((sig, size, bucket, row_cost))
+        except Exception as e:    # exactness failures surface per ticket
+            for t in tickets:
+                if t.result is None:
+                    t.error = e
+        if self.measure_service_time:
+            self.clock.advance(time.perf_counter() - t0)
+        self.stats.real_rows += len(tickets) * row_cost
+        now = self.clock.now()
+        for t in tickets:
+            t.completion = now
+            if now > t.deadline:
+                self.stats.slo_misses += 1
+        self.stats.dispatched += len(tickets)
+        return len(tickets)
+
+    # -- drain -------------------------------------------------------------
+
+    def drain(self, budget: Optional[int] = None) -> list[Ticket]:
+        """Run to quiescence: close every pending window (advancing
+        the clock to each close time, so deadline closes happen at
+        their deadline, not "now") and dispatch until no backlog
+        remains. Returns all tickets in submission order."""
+        while len(self.queue) or self.scheduler.backlog():
+            if self.step(budget):
+                continue
+            nxt = self.queue.next_close()
+            if nxt is not None:
+                self.clock.advance_to(nxt)
+            else:
+                break
+        out, self._tickets = self._tickets, []
+        return out

@@ -8,10 +8,14 @@ shape — only the literals differ — so the prepared-query subsystem
 compiles once per template. This module is the shared source of those
 variants for tests (parameter-sharing regression coverage, the
 differential harness's binding grids) and benchmarks
-(compile-amortized QPS in serving_benchmarks.py).
+(compile-amortized QPS in serving_benchmarks.py). It also generates
+the serving runtime's open-loop **multi-tenant traffic**
+(``make_tenant_traffic``): per-tenant Poisson arrivals with per-tenant
+signature mixes over Q1-Q10, deterministic per seed.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Sequence
 
 DATES = ((12, 25), (7, 4), (12, 25), (7, 4))
@@ -175,45 +179,49 @@ return ($name, count($r), avg($r/value))
 '''
 
 
+def variant_text(name: str, k: int, stations: Sequence[str],
+                 years: Sequence[int]) -> str:
+    """The ``k``-th deterministic constant-variant of
+    queries.ALL[name]. Constants cycle through real data values
+    (odometer-style, no RNG) so variants exercise the value paths;
+    mixed periods keep most variants textually distinct. Shared by the
+    differential harness's grids (``variant_grid``) and the
+    multi-tenant traffic generator (``make_tenant_traffic``)."""
+    ns, ny = len(stations), len(years)
+    st, y = stations[k % ns], years[k % ny]
+    dt = DTYPES[k % len(DTYPES)]
+    if name == "Q1":
+        m, d = DATES[k % len(DATES)]
+        return q1_variant(st, y, m, d)
+    if name == "Q2":
+        return q2_variant(dt, 50.0 + 13.5 * k)
+    if name == "Q3":
+        return q3_variant(st, ("PRCP", "TMAX", "TMIN")[k % 3],
+                          y, 10 + k % 7)
+    if name == "Q4":
+        return q4_variant(dt, 10 + k % 9)
+    if name == "Q5":
+        m, d = DATES[k % len(DATES)]
+        return q5_variant(STATES[k % len(STATES)],
+                          f"{y}-{m:02d}-{d:02d}T00:00:00.000")
+    if name == "Q6":
+        return q6_variant(dt, y)
+    if name == "Q7":
+        return q7_variant("FIPS:US", dt, y, 10 + k % 5)
+    if name == "Q8":
+        return q8_variant(10 + k % 11)
+    if name == "Q9":
+        return q9_variant(dt)
+    if name == "Q10":
+        return q10_variant(dt, 25.0 * (k % 8))
+    raise KeyError(name)
+
+
 def variant_grid(name: str, stations: Sequence[str],
                  years: Sequence[int], n: int) -> list[str]:
     """``n`` deterministic constant-variants of queries.ALL[name] —
-    the differential harness's binding grid. Constants cycle through
-    real data values (odometer-style, no RNG) so variants exercise the
-    value paths; mixed periods keep most variants textually distinct."""
-    ns, ny = len(stations), len(years)
-    out: list[str] = []
-    for k in range(n):
-        st, y = stations[k % ns], years[k % ny]
-        dt = DTYPES[k % len(DTYPES)]
-        if name == "Q1":
-            m, d = DATES[k % len(DATES)]
-            out.append(q1_variant(st, y, m, d))
-        elif name == "Q2":
-            out.append(q2_variant(dt, 50.0 + 13.5 * k))
-        elif name == "Q3":
-            out.append(q3_variant(st, ("PRCP", "TMAX", "TMIN")[k % 3],
-                                  y, 10 + k % 7))
-        elif name == "Q4":
-            out.append(q4_variant(dt, 10 + k % 9))
-        elif name == "Q5":
-            m, d = DATES[k % len(DATES)]
-            out.append(q5_variant(
-                STATES[k % len(STATES)],
-                f"{y}-{m:02d}-{d:02d}T00:00:00.000"))
-        elif name == "Q6":
-            out.append(q6_variant(dt, y))
-        elif name == "Q7":
-            out.append(q7_variant("FIPS:US", dt, y, 10 + k % 5))
-        elif name == "Q8":
-            out.append(q8_variant(10 + k % 11))
-        elif name == "Q9":
-            out.append(q9_variant(dt))
-        elif name == "Q10":
-            out.append(q10_variant(dt, 25.0 * (k % 8)))
-        else:
-            raise KeyError(name)
-    return out
+    the differential harness's binding grid."""
+    return [variant_text(name, k, stations, years) for k in range(n)]
 
 
 def make_workload(stations: Sequence[str],
@@ -283,3 +291,72 @@ def make_groupby_workload(years: Sequence[int], total: int = 64
                                            10 + k9 % 9)))
             k9 += 1
     return out
+
+
+# ---------------------------------------------------------------------------
+# Multi-tenant open-loop traffic (the serving runtime's workload)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantSpec:
+    """One tenant's traffic profile: Poisson arrival ``rate`` (mean
+    requests per unit of virtual time) and a weighted signature
+    ``mix`` over queries.ALL template names — per-tenant skew is what
+    makes cross-tenant fairness and cost-based bucketing non-trivial
+    to get right."""
+    name: str
+    rate: float
+    mix: tuple[tuple[str, float], ...]
+
+
+# three archetypes over Q1-Q10: a chatty point-lookup tenant, a
+# keyed-aggregation dashboard tenant, and a heavier join/report tenant
+DEFAULT_TENANTS = (
+    TenantSpec("interactive", 8.0,
+               (("Q1", 4.0), ("Q2", 3.0), ("Q5", 1.0))),
+    TenantSpec("dashboard", 4.0,
+               (("Q3", 2.0), ("Q4", 1.0), ("Q9", 2.0), ("Q10", 1.0))),
+    TenantSpec("reporting", 2.0,
+               (("Q6", 2.0), ("Q7", 1.0), ("Q8", 1.0))),
+)
+
+
+def make_tenant_traffic(tenants: Sequence[TenantSpec],
+                        stations: Sequence[str],
+                        years: Sequence[int], *,
+                        total: int, seed: int = 0
+                        ) -> list[tuple[float, str, str, str]]:
+    """Open-loop multi-tenant traffic: ``total`` time-sorted
+    ``(arrival, tenant, template, query_text)`` events. Arrivals are
+    per-tenant Poisson processes (exponential gaps), templates drawn
+    from each tenant's mix, constants from the per-(tenant, template)
+    odometer over ``variant_text``. Deterministic per seed — the same
+    trace replays with identical admission windows, which is what lets
+    benchmarks compare bucketing policies on equal footing."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    rate = sum(t.rate for t in tenants)
+    # generate past the expected horizon, then cut to exactly `total`
+    horizon = 2.0 * total / rate + 1.0
+    events: list[tuple[float, str, str, str]] = []
+    for ts in tenants:
+        names = [n for n, _ in ts.mix]
+        w = np.array([w for _, w in ts.mix], dtype=float)
+        w /= w.sum()
+        ks: dict[str, int] = {}
+        t = 0.0
+        while True:
+            t += float(rng.exponential(1.0 / ts.rate))
+            if t >= horizon:
+                break
+            name = names[int(rng.choice(len(names), p=w))]
+            k = ks.get(name, 0)
+            ks[name] = k + 1
+            events.append((t, ts.name, name,
+                           variant_text(name, k, stations, years)))
+    events.sort(key=lambda e: (e[0], e[1]))
+    if len(events) < total:
+        raise ValueError(f"traffic horizon too short: {len(events)} "
+                         f"< {total} events")
+    return events[:total]

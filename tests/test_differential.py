@@ -16,6 +16,12 @@ is driven through a seeded grid of constant bindings and checked for
      small capacities (scan 8 / join bucket 1 / join_cap 32 /
      group_cap 2) must regrow to results identical to the
      statistics-presized service.
+  4. batched-regrowth-vs-per-request: ``execute_batch`` on the tiny
+     service must stay ONE batch through the regrowth ladder (never
+     unbatching into per-request fallbacks) and still match.
+  5. scheduled-vs-direct: the async runtime (admission windows ->
+     DRR fairness -> bucketed dispatch) must return, per ticket,
+     exactly the direct per-request result.
 
 The unmarked fast subset keeps the default loop quick; the full
 >=20-case grid per query is slow-marked (scripts/ci.sh --differential
@@ -51,6 +57,8 @@ def services(weather_db):
         "prepared": QueryService(weather_db),
         "batch": QueryService(weather_db),
         "tiny": QueryService(weather_db, TINY, presize=False),
+        "tiny_batch": QueryService(weather_db, TINY, presize=False),
+        "sched": QueryService(weather_db),
     }
 
 
@@ -77,6 +85,26 @@ def _run_grid(weather_db, services, name, n):
         small = services["tiny"].execute(t)
         assert not small.overflow
         assert small.rows() == p.rows(), (name, t)
+
+    # 4. batched-regrowth bit parity: the tiny service must serve the
+    # grid as ONE regrown batch per signature — batches (not
+    # per-request fallbacks) account for every parameterized request
+    tb = services["tiny_batch"]
+    before = tb.stats.batched_requests
+    for p, b in zip(prepared, tb.execute_batch(texts)):
+        assert p.rows() == b.rows(), name
+    assert tb.stats.batched_requests == before + len(texts), name
+
+    # 5. scheduled-vs-direct bit parity: admission windows + DRR +
+    # bucketing decide only placement, never results (tenants
+    # alternate to exercise cross-tenant grouping)
+    sched = services["sched"]
+    tickets = [sched.submit(t, tenant="AB"[i % 2])
+               for i, t in enumerate(texts)]
+    sched.drain()
+    for p, tk in zip(prepared, tickets):
+        assert tk.error is None, (name, tk.error)
+        assert p.rows() == tk.result.rows(), name
     return texts
 
 

@@ -4,7 +4,10 @@ once per variant, with per-query results identical to unprepared
 execution. The full run is slow-marked (it compiles all 64 variants on
 the exact path for the parity oracle); scripts/ci.sh runs the same
 gate in smoke form (4 variants) via benchmarks/serving_benchmarks.py.
-"""
+The async multi-tenant suite (open-loop Poisson traffic through the
+admission/bucketing/DRR runtime) follows the same pattern: 4-variant
+smoke in ci.sh (--suite all / --scheduler), full 64-request run
+slow-marked here."""
 import pytest
 
 from repro.core import QueryService
@@ -94,3 +97,21 @@ def test_groupby_workload_smoke_shares_plans(weather_db):
         assert not svc.execute(q).overflow
     assert svc.stats.compiles == 3
     assert svc.cache_size() == 3
+
+
+@pytest.mark.slow
+def test_full_multitenant_suite_gates(tmp_path):
+    """The mixed-tenant acceptance gate, benchmark-grade: the full
+    64-request open-loop run must show cost-based bucketing cutting
+    padded rows >= 30% vs pow2 at an equal-or-lower compile count,
+    with every scheduled result bit-identical to direct execution
+    (serving_multitenant raises on any violated gate)."""
+    from benchmarks.serving_benchmarks import serving_multitenant
+    out = tmp_path / "bench_mt.json"
+    results = serving_multitenant(variants=64, out_path=str(out),
+                                  smoke=False)
+    assert results["padded_rows_reduction"] >= 0.30
+    assert (results["cost"]["compiles_total"]
+            <= results["pow2"]["compiles_total"])
+    assert results["result_mismatches"] == 0
+    assert out.exists()
