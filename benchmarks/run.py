@@ -18,8 +18,10 @@ import traceback
 # --only serving_groupby)
 SUITES = {
     "groupby": ["serving_groupby"],
+    "ordered": ["serving_ordered"],
     "multitenant": ["serving_multitenant"],
-    "serving": ["serving", "serving_groupby", "serving_multitenant"],
+    "serving": ["serving", "serving_groupby", "serving_ordered",
+                "serving_multitenant"],
 }
 
 
@@ -64,6 +66,12 @@ def main() -> None:
             out_path=("BENCH_serving_smoke.json" if args.quick
                       else "BENCH_serving.json")),
         "serving_groupby": lambda: serving_benchmarks.serving_groupby(
+            variants=8 if args.quick else 64,
+            repeats=1 if args.quick else 3,
+            smoke=args.quick,
+            out_path=("BENCH_serving_smoke.json" if args.quick
+                      else "BENCH_serving.json")),
+        "serving_ordered": lambda: serving_benchmarks.serving_ordered(
             variants=8 if args.quick else 64,
             repeats=1 if args.quick else 3,
             smoke=args.quick,

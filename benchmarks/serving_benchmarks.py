@@ -1,7 +1,7 @@
 """Serving-tier benchmark: compile-amortized QPS over multi-tenant
 constant-variant workloads (the prepared-query subsystem's payoff).
 
-Three suites share one record (BENCH_serving.json):
+Four suites share one record (BENCH_serving.json):
 
   scan_join   — N constant-variants of the paper's Q1/Q2/Q3 templates
                 (top-level keys, the PR-2 record)
@@ -11,6 +11,13 @@ Three suites share one record (BENCH_serving.json):
                 the "groupby" key — the statistics-sized segment space
                 means group-by queries presize, prepare and batch like
                 every other query class
+  ordered     — N constant-variants of the ordered top-k templates
+                (sum-descending Q11, count-ascending Q11c), recorded
+                under "ordered": the top-k pushdown (statistics-
+                presized topk_cap) vs full-sort-then-slice
+                (pushdown_topk=False) — materialized group rows and
+                wall-clock deltas at equal compile count; outside
+                smoke the pushdown must cut materialized rows >= 30%
   multitenant — open-loop Poisson traffic from three tenants with
                 skewed Q1-Q10 mixes through the async serving runtime
                 (SLO admission windows -> DRR fairness -> bucketed
@@ -48,6 +55,7 @@ from benchmarks.common import row
 from repro.core import QueryService
 from repro.core.serving import CostBasedBucketing
 from repro.core.workload import (DEFAULT_TENANTS, make_groupby_workload,
+                                 make_ordered_workload,
                                  make_tenant_traffic, make_workload)
 from repro.data.weather import WeatherSpec, build_database
 
@@ -152,7 +160,7 @@ def _measure(db, wl, repeats: int, label: str, smoke: bool) -> dict:
     return results
 
 
-SECTIONS = ("groupby", "multitenant")
+SECTIONS = ("groupby", "ordered", "multitenant")
 
 
 def _merge_record(out_path: str, section, results: dict) -> None:
@@ -202,6 +210,102 @@ def serving_groupby(variants: int = 64, repeats: int = 3,
     wl = make_groupby_workload(spec.years, total=variants)
     results = _measure(db, wl, repeats, "serving_groupby", smoke)
     _merge_record(out_path, "groupby", results)
+    return results
+
+
+def serving_ordered(variants: int = 64, repeats: int = 3,
+                    out_path: str = "BENCH_serving.json",
+                    smoke: bool = False) -> dict:
+    """The ordered top-k suite: Q11/Q11c constant-variants served with
+    the top-k pushdown (statistics-presized ``topk_cap``) vs
+    full-sort-then-slice (``pushdown_topk=False``). Both paths share
+    one compile per template and must agree bit-for-bit INCLUDING row
+    order; the pushdown is gated (outside smoke, BEFORE the json
+    write) at >= 30% fewer materialized group rows — the sorted
+    output tile's padded segment width summed over requests — at an
+    equal compile count."""
+    spec = SMOKE_SPEC if smoke else FULL_SPEC
+    db = build_database(spec, num_partitions=4)
+    wl = make_ordered_workload(total=variants)
+    queries = [q for _, q in wl]
+    templates = sorted({t for t, _ in wl})
+    label = "serving_ordered"
+
+    def measure(svc):
+        t_cold, rs = _timed_pass(
+            lambda qs: [svc.execute(q) for q in qs], queries)
+        warm = []
+        for _ in range(repeats):
+            dt, _ = _timed_pass(
+                lambda qs: [svc.execute(q) for q in qs], queries)
+            warm.append(dt)
+        # materialized group rows: the ordered output tile's padded
+        # segment width (per partition), summed over the workload —
+        # what the host pays to fetch/compact per request
+        mat = sum(r.raw["valid"].shape[-1] for r in rs)
+        return t_cold, min(warm), rs, mat
+
+    svc_push = QueryService(db)
+    cold_p, warm_p, rs_push, mat_push = measure(svc_push)
+    svc_full = QueryService(db, pushdown_topk=False)
+    cold_f, warm_f, rs_full, mat_full = measure(svc_full)
+
+    mismatches = [i for i, (a, b) in enumerate(zip(rs_push, rs_full))
+                  if a.rows() != b.rows()]    # order-sensitive
+    reduction = (1.0 - mat_push / mat_full) if mat_full else 0.0
+    n = len(queries)
+    results = {
+        "variants": n,
+        "templates": templates,
+        "smoke": smoke,
+        "limit_k": 3,
+        "compiles_pushdown": svc_push.stats.compiles,
+        "compiles_fullsort": svc_full.stats.compiles,
+        "materialized_rows_pushdown": mat_push,
+        "materialized_rows_fullsort": mat_full,
+        "materialized_rows_reduction": reduction,
+        "topk_cap_presized": max(
+            (c.topk_cap for c in svc_push.cached_configs()
+             if c.topk_cap is not None), default=-1),
+        "fullsort_width": max(
+            (c.group_cap for c in svc_full.cached_configs()
+             if c.group_cap is not None), default=-1),
+        "cold_s_pushdown": cold_p,
+        "cold_s_fullsort": cold_f,
+        "warm_s_pushdown": warm_p,
+        "warm_s_fullsort": warm_f,
+        "warm_qps_pushdown": n / warm_p,
+        "warm_qps_fullsort": n / warm_f,
+        "warm_speedup": warm_f / warm_p,
+        "result_mismatches": len(mismatches),
+    }
+    for k, v in results.items():
+        if isinstance(v, (int, float)):
+            row(label, f"{n}var", k, float(v))
+
+    # gates BEFORE the json write, so a regressed run never
+    # overwrites the committed good record
+    if mismatches:
+        raise RuntimeError(
+            f"top-k pushdown results drifted from full-sort-then-"
+            f"slice at variant indices {mismatches[:8]}")
+    if svc_push.stats.compiles > len(templates):
+        raise RuntimeError(
+            f"parameter-sharing regression (ordered): "
+            f"{svc_push.stats.compiles} compiles for "
+            f"{len(templates)} templates")
+    if svc_push.stats.compiles > svc_full.stats.compiles:
+        raise RuntimeError(
+            f"pushdown used more compiles "
+            f"({svc_push.stats.compiles}) than full sort "
+            f"({svc_full.stats.compiles})")
+    if not smoke and reduction < 0.30:
+        # smoke's 8-station dictionary rounds to the same 16-wide cap
+        # bucket as the pushdown, so the gate is full-spec only
+        raise RuntimeError(
+            f"top-k pushdown only cut materialized group rows by "
+            f"{reduction:.1%} (< 30%) vs full-sort-then-slice")
+    _merge_record(out_path, "ordered", results)
     return results
 
 
@@ -345,6 +449,7 @@ def serving_multitenant(variants: int = 64, repeats: int = 3,
 
 
 SUITES = {"scan_join": serving, "groupby": serving_groupby,
+          "ordered": serving_ordered,
           "multitenant": serving_multitenant}
 
 

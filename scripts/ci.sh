@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
 # Tier-1 CI loop: the ROADMAP verify command plus timing report, then
-# the serving-benchmark smoke gates — scan/join, group-by AND async
-# multi-tenant workloads (4 variants, 1 repeat each — fails fast if
+# the serving-benchmark smoke gates — scan/join, group-by, ordered
+# top-k AND async multi-tenant workloads (4 variants, 1 repeat each —
+# fails fast if
 # prepared-query parameter sharing regresses to per-variant compiles
 # or results drift from the exact path; the full 64-variant runs live
 # in `python -m benchmarks.serving_benchmarks` / the slow-marked
@@ -17,15 +18,24 @@
 #                                 stage standalone (admission/fairness/
 #                                 bucketing unit+property tests plus the
 #                                 4-variant multitenant benchmark gate)
+#   scripts/ci.sh --properties    also run the seeded property suites
+#                                 (segmented top-k vs host oracle,
+#                                 windowed-merge invariance, regrowth
+#                                 ladder monotonicity) as their own
+#                                 stage — the fast slices; full grids
+#                                 are slow-marked (FULL=1)
 #   scripts/ci.sh tests/...       any extra pytest args pass through
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 DIFFERENTIAL=0
 SCHEDULER=0
-while [ "${1:-}" = "--differential" ] || [ "${1:-}" = "--scheduler" ]; do
+PROPERTIES=0
+while [ "${1:-}" = "--differential" ] || [ "${1:-}" = "--scheduler" ] \
+        || [ "${1:-}" = "--properties" ]; do
     if [ "$1" = "--differential" ]; then DIFFERENTIAL=1; fi
     if [ "$1" = "--scheduler" ]; then SCHEDULER=1; fi
+    if [ "$1" = "--properties" ]; then PROPERTIES=1; fi
     shift
 done
 MARK=()
@@ -42,4 +52,8 @@ fi
 if [ "$SCHEDULER" = "1" ]; then
     python -m pytest -x -q tests/test_scheduler.py
     python -m benchmarks.serving_benchmarks --smoke --suite multitenant
+fi
+if [ "$PROPERTIES" = "1" ]; then
+    python -m pytest -x -q -m "properties and not slow" \
+        tests/test_properties.py
 fi

@@ -273,6 +273,28 @@ class GroupBy(Op):
 
 
 @dataclasses.dataclass(frozen=True)
+class OrderBy(Op):
+    """Ordered output (XQuery ``order by`` after ``group by``): sort
+    the tuple stream by ``keys`` — (expr, descending) pairs, most
+    significant first. The translator appends the grouping key as a
+    final ascending tiebreak so grouped orderings are total (and
+    therefore identical across engines and batch layouts). Lowered to
+    a capacity-bounded segmented sort (``ExecConfig.topk_cap``)."""
+    keys: tuple[tuple[Expr, bool], ...]
+    child: Op
+
+
+@dataclasses.dataclass(frozen=True)
+class Limit(Op):
+    """Top-k output (``limit k``): keep the first ``k`` tuples of the
+    (ordered) stream. ``k`` is structural — it bounds compiled output
+    shapes, so it stays baked in the plan signature rather than
+    lifting into the parameter vector."""
+    k: int
+    child: Op
+
+
+@dataclasses.dataclass(frozen=True)
 class DistributeResult(Op):
     vars: tuple[int, ...]
     child: Op
@@ -340,6 +362,8 @@ def used_exprs(op: Op) -> tuple[Expr, ...]:
         return (op.cond,)
     if isinstance(op, GroupBy):
         return (op.key_expr,) + tuple(e for _, _, e in op.aggs)
+    if isinstance(op, OrderBy):
+        return tuple(e for e, _ in op.keys)
     return ()
 
 
@@ -384,6 +408,12 @@ def _fmt_op(op: Op) -> str:
     if isinstance(op, GroupBy):
         aggs = ", ".join(f"$${v}:{fn}({e})" for v, fn, e in op.aggs)
         return (f"GROUP-BY( $${op.key_var}:{op.key_expr} | {aggs} )")
+    if isinstance(op, OrderBy):
+        keys = ", ".join(f"{e} {'desc' if d else 'asc'}"
+                         for e, d in op.keys)
+        return f"ORDER-BY( {keys} )"
+    if isinstance(op, Limit):
+        return f"LIMIT( {op.k} )"
     if isinstance(op, Subplan):
         return "SUBPLAN {"
     if isinstance(op, Join):

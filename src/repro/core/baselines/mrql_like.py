@@ -148,6 +148,18 @@ class MrqlLike:
         assert isinstance(plan, A.DistributeResult)
         p = self.ex.num_partitions
         body = plan.child
+        # ordered grouped output: LIMIT/ORDER-BY peel off the top and
+        # run as a final host sort job after the reduce (the MapReduce
+        # "total order" job), versus the executor's fused capacity-
+        # bounded segmented sort
+        limit_k: Optional[int] = None
+        order_keys: Optional[tuple] = None
+        if isinstance(body, A.Limit):
+            limit_k = body.k
+            body = body.child
+        if isinstance(body, A.OrderBy):
+            order_keys = body.keys
+            body = body.child
         wrappers: list[A.Op] = []
         while isinstance(body, (A.Unnest, A.Assign)):
             wrappers.append(body)
@@ -165,7 +177,12 @@ class MrqlLike:
                 raise NotImplementedError(
                     "MrqlLike group-by maps are partition-local; a "
                     "grouped join would need a join job first")
-            return self._run_groupby(plan, wrappers, having, sel_body, p)
+            return self._run_groupby(plan, wrappers, having, sel_body, p,
+                                     order_keys=order_keys,
+                                     limit_k=limit_k)
+        if order_keys is not None or limit_k is not None:
+            raise NotImplementedError(
+                "MrqlLike order by / limit apply to grouped plans")
 
         agg: Optional[A.Aggregate] = None
         if isinstance(body, A.Subplan):
@@ -218,12 +235,16 @@ class MrqlLike:
         return MrqlResult([(total / scale,)], overflow, jobs=2)
 
     def _run_groupby(self, plan, wrappers, having: list[A.Expr],
-                     gb: A.GroupBy, p) -> MrqlResult:
+                     gb: A.GroupBy, p, order_keys=None,
+                     limit_k: Optional[int] = None) -> MrqlResult:
         """Staged MapReduce group-by: map tasks emit flat (key sid,
         values) records per partition (the shuffle write), one reducer
         per key aggregates on the host, HAVING predicates run in the
         reducer. Mirrors how MRQL lowers a group-by to a MapReduce
-        job — versus the executor's fused segmented-reduce + psum."""
+        job — versus the executor's fused segmented-reduce + psum.
+        ``order_keys``/``limit_k`` add a final host sort-and-slice job
+        (multi-pass stable sort, least-significant key first; key
+        exprs evaluate in the per-group env like HAVING predicates)."""
         shuffle: list[tuple] = []
         overflow = False
         agg_vals = [(v, fn, e) for v, fn, e in gb.aggs if fn != "count"]
@@ -277,8 +298,16 @@ class MrqlLike:
                 x = env[src]
                 row.append(x / scale if isinstance(x, float)
                            and scale != 1.0 else x)
-            rows.append(tuple(row))
-        return MrqlResult(rows, overflow, jobs=2)
+            rows.append((env, tuple(row)))
+        jobs = 2
+        if order_keys is not None:
+            for e, desc in reversed(order_keys):
+                rows.sort(key=lambda g, e=e: self._host_value(e, g[0]),
+                          reverse=desc)
+            jobs += 1       # the final total-order job
+        if limit_k is not None:
+            rows = rows[:limit_k]
+        return MrqlResult([r for _, r in rows], overflow, jobs=jobs)
 
     def _host_ebv(self, e: A.Expr, env: dict) -> bool:
         return bool(self._host_value(e, env))

@@ -148,8 +148,11 @@ class SaxonLike:
         """FLWOR with a group-by clause: materialize the tuple stream
         of the pre-group clauses, bucket by the key's *string value*
         (the executor groups on dictionary sids — exact string
-        identity), then evaluate HAVING ``where`` clauses and return
-        items per group with aggregate-call semantics."""
+        identity), then evaluate HAVING ``where`` clauses, ``order
+        by`` (aggregate keys, grouping-key string as the final
+        ascending tiebreak — the executor's total order) and
+        ``limit``, and return items per group with aggregate-call
+        semantics."""
         idx = next(i for i, cl in enumerate(ast.clauses)
                    if cl[0] == "groupby")
         pre, (_, gname, key_ast) = ast.clauses[:idx], ast.clauses[idx]
@@ -184,18 +187,46 @@ class SaxonLike:
             groups.setdefault(k, []).append(e)
         items = (ast.ret.items if isinstance(ast.ret, xq.Seq)
                  else (ast.ret,))
-        out: list[Any] = []
+        havings, order_keys, limits = [], [], []
+        for cl in post:
+            if cl[0] == "where":
+                havings.append(cl)
+            elif cl[0] == "orderby":
+                order_keys.append((cl[1], cl[2]))
+            elif cl[0] == "limit":
+                limits.append(cl[1])
+            else:       # the oracle must fail loudly, never guess
+                raise NotImplementedError(
+                    f"post-group clause {cl[0]!r}")
+        kept: list[tuple[str, list[dict], dict]] = []
         for k, members in groups.items():
             genv = {**env, gname: k}
             keep = True
-            for cl in post:
-                assert cl[0] == "where", cl
+            for cl in havings:
                 cond = self._agg_substitute(cl[1], members)
                 if not self._ebv(self.eval(cond, genv)):
                     keep = False
                     break
-            if not keep:
-                continue
+            if keep:
+                kept.append((k, members, genv))
+        if order_keys:
+            # multi-pass stable sort, least-significant key first; the
+            # grouping-key string is the final ascending tiebreak (the
+            # translator appends it on the device side too), so the
+            # ordering is total and engine-independent
+            kept.sort(key=lambda g: g[0])
+            for key_ast, desc in reversed(order_keys):
+                def val(g):
+                    k, members, genv = g
+                    e = self._agg_substitute(key_ast, members)
+                    got = self.eval(e, genv)
+                    v = self.atomize(got[0]) if got else float("nan")
+                    return self._num(v) if not isinstance(v, str) else v
+                kept.sort(key=val, reverse=desc)
+        if limits:
+            kept = kept[:min(limits)]
+        out: list[Any] = []
+        for k, members, genv in kept:
             for item in items:
                 out.extend(self.eval(
                     self._agg_substitute(item, members), genv))

@@ -30,7 +30,7 @@ from repro.core import algebra as A
 from repro.core import xdm
 from repro.core.physical import (Col, ExprEval, Tile, _gather,
                                  device_tables, path_match_mask,
-                                 rows_from_mask)
+                                 rows_from_mask, topk_rows)
 
 I32 = jnp.int32
 F32 = jnp.float32
@@ -43,6 +43,10 @@ class ExecConfig:
                                           # (None: uncompacted probe width)
     group_cap: Optional[int] = None       # group-by segment capacity
                                           # (None: full string dictionary)
+    topk_cap: Optional[int] = None        # ordered-output capacity: the
+                                          # ORDER BY / LIMIT sorted tile
+                                          # width (None: the child tile's
+                                          # full segment width)
     join_strategy: str = "broadcast"      # broadcast | repartition
     join_bucket: int = 4                  # hash-bucket probe width
     use_pallas_join: bool = False         # route probe through kernels/
@@ -51,7 +55,7 @@ class ExecConfig:
         """The fields that change compiled shapes/semantics — the
         plan-cache key component (service.py)."""
         return (self.scan_cap, self.join_cap, self.group_cap,
-                self.join_strategy, self.join_bucket,
+                self.topk_cap, self.join_strategy, self.join_bucket,
                 self.use_pallas_join)
 
 
@@ -60,15 +64,17 @@ class EvalCtx:
     """Per-trace evaluation context: the active config plus per-stage
     overflow accumulators. Scan-cap overflow (DATASCAN/UNNEST fixed
     capacity), join-bucket overflow (probe width), join-cap overflow
-    (compacted probe-output capacity) and group-cap overflow (keyed-
-    aggregation segment capacity) are surfaced as separate output
-    flags so an adaptive layer can regrow exactly the capacity that
-    saturated instead of inflating everything."""
+    (compacted probe-output capacity), group-cap overflow (keyed-
+    aggregation segment capacity) and topk-cap overflow (the ordered-
+    output sorted tile) are surfaced as separate output flags so an
+    adaptive layer can regrow exactly the capacity that saturated
+    instead of inflating everything."""
     cfg: ExecConfig
     scan_ovf: list = dataclasses.field(default_factory=list)
     join_ovf: list = dataclasses.field(default_factory=list)
     joincap_ovf: list = dataclasses.field(default_factory=list)
     group_ovf: list = dataclasses.field(default_factory=list)
+    topk_ovf: list = dataclasses.field(default_factory=list)
 
 
 class Comm:
@@ -442,6 +448,19 @@ class Executor:
             return self._eval_join(op, ev, comm, nts_input, ctx)
         if isinstance(op, A.GroupBy):
             return self._eval_group_by(op, ev, comm, nts_input, ctx)
+        if isinstance(op, A.OrderBy):
+            return self._eval_orderby(op, ev, comm, nts_input, ctx,
+                                      limit=None)
+        if isinstance(op, A.Limit):
+            if isinstance(op.child, A.OrderBy):
+                # top-k pushdown: the limit fuses into the sort, so
+                # the effective output need is k rows, not every
+                # valid group — topk_cap ~ k suffices
+                return self._eval_orderby(op.child, ev, comm,
+                                          nts_input, ctx, limit=op.k)
+            t = self._eval(op.child, ev, comm, nts_input, ctx)
+            keep = jnp.cumsum(t.valid.astype(I32)) <= op.k
+            return Tile(t.cols, t.valid & keep, t.overflow)
         if isinstance(op, A.DistributeResult):
             return self._eval(op.child, ev, comm, nts_input, ctx)
         raise PlanError(f"cannot execute {type(op).__name__}")
@@ -540,6 +559,57 @@ class Executor:
         central = comm.index() == 0
         out_valid = (g_counts > 0) & central
         return Tile(cols, out_valid, t.overflow | govf)
+
+    def _eval_orderby(self, op: "A.OrderBy", ev, comm, nts_input,
+                      ctx: EvalCtx, limit: Optional[int]) -> Tile:
+        """Capacity-bounded segmented sort over the (grouped) tuple
+        stream — ORDER BY, with the top-k pushdown when a LIMIT sits
+        directly above. The sorted tile is ``topk_cap`` wide (None:
+        the child's full width), so ranked group results never
+        materialize the full group dictionary: a limit-k query needs
+        only ~k output slots no matter how many segments the reduce
+        ran over. Too-small caps raise ``overflow_topk_cap`` (its own
+        rung in the service regrowth ladder) — never a silent
+        truncation of the ranking."""
+        t = self._eval(op.child, ev, comm, nts_input, ctx)
+        sort_keys: list[tuple] = []
+        for e, desc in op.keys:
+            col = ev.eval(e, t.cols)
+            if col.kind == "str":
+                # dictionary sids are insertion-ordered; compare by
+                # the derived lexicographic rank so device order ==
+                # host string order
+                rank = ev.tables["__derived__"]["rank_of_sid"]
+                key = _gather(rank, col.data,
+                              jnp.int32(np.iinfo(np.int32).max))
+            elif col.kind == "date":
+                key = col.data
+            else:
+                key = ev.atom_num(col)
+            sort_keys.append((key, desc))
+        idx, valid, ovf = topk_rows(sort_keys, t.valid,
+                                    ctx.cfg.topk_cap, limit)
+        ctx.topk_ovf.append(ovf)
+
+        def take(c: Col) -> Col:
+            if c.kind in ("det", "xnode"):
+                return Col(c.kind,
+                           tuple(_gather(d, idx,
+                                         jnp.nan if d.dtype == F32
+                                         else -1)
+                                 for d in c.data), c.table)
+            if getattr(c.data, "ndim", 1) == 0:
+                return c    # row-invariant scalar (const/param)
+            if c.data.dtype == jnp.bool_:
+                fill = False
+            elif c.data.dtype == F32:
+                fill = jnp.nan
+            else:
+                fill = -1
+            return Col(c.kind, _gather(c.data, idx, fill), c.table)
+
+        cols = {v: take(c) for v, c in t.cols.items()}
+        return Tile(cols, valid, t.overflow | ovf)
 
     def _eval_unnest(self, op: A.Unnest, ev, comm, nts_input,
                      ctx: EvalCtx) -> Tile:
@@ -764,7 +834,9 @@ class Executor:
                                "overflow_join_cap":
                                    or_all(ctx.joincap_ovf),
                                "overflow_group_cap":
-                                   or_all(ctx.group_ovf)}
+                                   or_all(ctx.group_ovf),
+                               "overflow_topk_cap":
+                                   or_all(ctx.topk_ovf)}
         for v in plan.vars:
             c = tile.cols[v]
             if c.kind == "node":
@@ -819,6 +891,8 @@ class ResultSet:
             np.any(raw.get("overflow_join_cap", False)))
         self.overflow_group_cap = bool(
             np.any(raw.get("overflow_group_cap", False)))
+        self.overflow_topk_cap = bool(
+            np.any(raw.get("overflow_topk_cap", False)))
 
     def rows(self) -> list[tuple]:
         assert isinstance(self.plan, A.DistributeResult)

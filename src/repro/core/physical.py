@@ -409,6 +409,21 @@ def estimate_group_cap(db: xdm.Database, tag: str) -> Optional[int]:
     return round_cap(max(bounds))
 
 
+def estimate_topk_cap(db: xdm.Database, tag: str,
+                      k: Optional[int]) -> Optional[int]:
+    """Statistics-based ordered-output capacity for an ORDER BY /
+    LIMIT over a GROUP-BY on ``.../tag`` keys: the sorted tile never
+    needs more rows than min(limit k, distinct group keys) — the same
+    ``tag_distinct`` bound that presizes the segment space, clipped by
+    the top-k pushdown. None when no statistics exist and no limit is
+    given (the full segment width then keeps results exact)."""
+    bound = estimate_group_cap(db, tag)
+    if k is not None:
+        cap = round_cap(k)
+        return min(cap, bound) if bound is not None else cap
+    return bound
+
+
 def rows_from_mask(mask: jnp.ndarray, cap: int
                    ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """mask [N] -> (idx [cap], valid [cap], overflow). Row order is
@@ -420,3 +435,42 @@ def rows_from_mask(mask: jnp.ndarray, cap: int
     idx = jnp.where(valid, idx, NEG)
     overflow = jnp.sum(mask) > cap
     return idx.astype(I32), valid, overflow
+
+
+def topk_rows(sort_keys: list[tuple[jnp.ndarray, bool]],
+              valid: jnp.ndarray, cap: Optional[int],
+              limit: Optional[int]
+              ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Capacity-bounded segmented sort: the ORDER BY / top-k core.
+
+    ``sort_keys`` are (key array [N], descending) pairs, most
+    significant first; keys are numeric (i32 lexicographic string
+    ranks, packed dates, or f32 aggregate values). Valid rows sort
+    first by the keys; invalid rows sink to the end. Returns
+    (idx [C], valid [C], overflow) with C = min(cap or N, N): the
+    gather order of the sorted tile. ``limit`` masks output rows past
+    the top k; ``overflow`` is raised iff the C output slots cannot
+    hold every row the query needs — min(#valid, limit) — so a
+    top-k pushdown (cap ~ k) never materializes the full segment
+    space, and a too-small cap surfaces on its own regrowth flag
+    instead of silently truncating the ranking."""
+    n = valid.shape[0]
+    cap = n if cap is None else min(int(cap), n)
+    ops = []
+    for key, desc in sort_keys:
+        if key.dtype == jnp.bool_:
+            key = key.astype(I32)
+        zero = jnp.zeros((), key.dtype)
+        k = jnp.where(valid, key, zero)   # invalid rows: inert keys
+        ops.append(-k if desc else k)
+    # lexsort: LAST operand is primary — invalid-sinking flag first
+    order = jnp.lexsort(tuple(reversed(ops)) + ((~valid).astype(I32),))
+    idx = order[:cap].astype(I32)
+    out_valid = jnp.take(valid, idx)
+    if limit is not None:
+        out_valid = out_valid & (jnp.arange(cap) < limit)
+    n_valid = jnp.sum(valid.astype(I32))
+    need = n_valid if limit is None else jnp.minimum(
+        n_valid, jnp.int32(limit))
+    overflow = need > cap
+    return idx, out_valid, overflow

@@ -151,7 +151,12 @@ class _Lifter:
             aggs = tuple((v, fn, self.expr(e)) for v, fn, e in op.aggs)
             return op.replace(key_expr=self.expr(op.key_expr),
                               aggs=aggs, child=self.op(op.child))
-        if isinstance(op, (A.DataScan, A.DistributeResult)):
+        if isinstance(op, A.OrderBy):
+            keys = tuple((self.expr(e), d) for e, d in op.keys)
+            return op.replace(keys=keys, child=self.op(op.child))
+        if isinstance(op, (A.DataScan, A.DistributeResult, A.Limit)):
+            # Limit.k is structural (it fixes compiled output shapes)
+            # and stays baked, like element names and collection paths
             return op.replace(child=self.op(op.child))
         raise TypeError(op)
 

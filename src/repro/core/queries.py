@@ -1,7 +1,10 @@
-"""The paper's eight benchmark queries (§5.2), verbatim — plus two
-group-by queries (Q9/Q10) on the paper's §6 'planned next step' (keyed
-aggregation), so every query class the serving tier supports has a
-canonical representative here."""
+"""The paper's eight benchmark queries (§5.2), verbatim — plus four
+group-by queries on the paper's §6 'planned next step' (keyed
+aggregation): Q9/Q10 (plain / HAVING group-by), Q11 (ordered top-k
+group-by: order by an aggregate, limit k) and Q12 (the windowed
+grouped stream's per-window slice: one admission window's mergeable
+partial-group query). Every query class the serving tier supports has
+a canonical representative here."""
 
 Q1 = '''
 for $r in collection("/sensors")/dataCollection/data
@@ -99,11 +102,32 @@ where sum($r/value) ge 100
 return ($st, sum($r/value), max($r/value))
 '''
 
+Q11 = '''
+for $r in collection("/sensors")/dataCollection/data
+where $r/dataType eq "TMAX"
+group by $st := $r/station
+order by sum($r/value) descending
+limit 3
+return ($st, count($r), sum($r/value))
+'''
+
+Q12 = '''
+for $r in collection("/sensors")/dataCollection/data
+where $r/dataType eq "PRCP"
+ and year-from-dateTime(dateTime(data($r/date))) eq 2000
+group by $st := $r/station
+return ($st, count($r), sum($r/value), min($r/value), max($r/value))
+'''
+
 ALL = {"Q1": Q1, "Q2": Q2, "Q3": Q3, "Q4": Q4,
        "Q5": Q5, "Q6": Q6, "Q7": Q7, "Q8": Q8,
-       "Q9": Q9, "Q10": Q10}
+       "Q9": Q9, "Q10": Q10, "Q11": Q11, "Q12": Q12}
 
 SCALAR = ("Q3", "Q4", "Q7", "Q8")    # single-number results
 JOINS = ("Q5", "Q6", "Q7", "Q8")
-GROUPED = ("Q9", "Q10")              # keyed-aggregation results
-                                     # (float aggregate columns)
+GROUPED = ("Q9", "Q10", "Q11", "Q12")   # keyed-aggregation results
+                                        # (float aggregate columns)
+ORDERED = ("Q11",)                   # order-by-aggregate + limit
+WINDOWED = ("Q12",)                  # mergeable windowed-stream slices
+                                     # (count/sum/min/max only, no
+                                     # HAVING, no post-group wrappers)

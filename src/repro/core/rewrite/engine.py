@@ -153,9 +153,12 @@ def remove_identity_assigns(root: Op) -> Op:
             return op.replace(expr=substitute(op.expr, mapping))
         if isinstance(op, DataScan):
             return op
-        from repro.core.algebra import GroupBy, Join, Select
+        from repro.core.algebra import GroupBy, Join, OrderBy, Select
         if isinstance(op, Select):
             return op.replace(expr=substitute(op.expr, mapping))
+        if isinstance(op, OrderBy):
+            return op.replace(keys=tuple(
+                (substitute(e, mapping), d) for e, d in op.keys))
         if isinstance(op, GroupBy):
             return op.replace(
                 key_expr=substitute(op.key_expr, mapping),

@@ -55,18 +55,28 @@ to the ROADMAP's million-user north star — needs more, all here:
    width; join-cap overflow (the compacted probe-output capacity) grows
    ``join_cap`` the same way; group-cap overflow (the keyed-aggregation
    segment capacity) grows ``group_cap`` toward the full string
-   dictionary, its own impossible-overflow ceiling. Per-stage flags
+   dictionary, its own impossible-overflow ceiling; topk-cap overflow
+   (the ordered-output sorted tile) grows ``topk_cap`` toward the same
+   dictionary ceiling. Per-stage flags
    from the executor mean only the saturated capacity is regrown, so
    caps stay tight and padded compute stays low. Regrowth recompiles
    (new static shapes) — but each grown variant lands in the cache, so
-   a workload pays each growth step once.
+   a workload pays each growth step once. Every rung is monotone: a
+   cap that has cleared its overflow flag never re-raises it at a
+   larger cap (pinned by tests/test_properties.py).
 
 5. **Statistics-based cap pre-sizing.** ``Database`` gathers per-tag
    node counts at build time; a child path ``/a/b/c`` can match at most
    ``count(tag == c)`` rows per partition, so first-shot caps are close
    to right and the retry loop rarely fires at all. Group-by segment
    capacities come from per-tag *distinct-value* counts: a key
-   ``$r/c`` yields at most ``distinct(text of tag c)`` groups.
+   ``$r/c`` yields at most ``distinct(text of tag c)`` groups. Join
+   probe-output capacities reuse the scan statistics (matches are
+   bounded by the probe tile's width). Ordered-output capacities take
+   the same distinct-value bound clipped by the **top-k pushdown**:
+   a ``limit k`` query needs ~k sorted output slots, not the full
+   segment space (``pushdown_topk=False`` restores full-sort-then-
+   slice — the "ordered" benchmark's ablation baseline).
 
 Serving tier query coverage (core/queries.py; "preparable" = literals
 lift into a shared parameterized plan, "batchable" = stacked-parameter
@@ -74,22 +84,32 @@ batched dispatch through ``execute_batch`` — since the serving runtime
 this includes batched dispatch under ``shard_map`` (mode="spmd":
 params replicated across the mesh, the batch vmap outside the mesh
 axis), "scheduled" = admitted/bucketed/dispatched by the async
-``submit()/drain()`` runtime with bit parity to direct execution):
+``submit()/drain()`` runtime with bit parity to direct execution,
+"ordered" = supports ORDER BY on aggregates + LIMIT top-k pushdown,
+"windowed" = mergeable for the streaming-window grouped mode — aggs
+restricted to count/sum/min/max with no HAVING / post-group wrappers,
+so per-window partial groups merge associatively in serving/window.py):
 
-  =====  ==========================  ==========  =========  =========
-  query  shape                       preparable  batchable  scheduled
-  =====  ==========================  ==========  =========  =========
-  Q1     scan + 4-predicate filter   yes         yes        yes
-  Q2     scan + value filter         yes         yes        yes
-  Q3     scalar agg (sum div)        yes         yes        yes
-  Q4     scalar agg (max div)        yes         yes        yes
-  Q5     hash join + quantifier      yes         yes        yes
-  Q6     hash join, 3-col rows       yes         yes        yes
-  Q7     join + scalar agg           yes         yes        yes
-  Q8     self-join + scalar agg      yes         yes        yes
-  Q9     keyed group-by aggs        yes         yes        yes
-  Q10    group-by + HAVING filter    yes         yes        yes
-  =====  ==========================  ==========  =========  =========
+  =====  ==========================  ====  =====  =====  =====  =====
+  query  shape                       prep  batch  sched  order  windw
+  =====  ==========================  ====  =====  =====  =====  =====
+  Q1     scan + 4-predicate filter   yes   yes    yes    —      —
+  Q2     scan + value filter         yes   yes    yes    —      —
+  Q3     scalar agg (sum div)        yes   yes    yes    —      —
+  Q4     scalar agg (max div)        yes   yes    yes    —      —
+  Q5     hash join + quantifier      yes   yes    yes    —      —
+  Q6     hash join, 3-col rows       yes   yes    yes    —      —
+  Q7     join + scalar agg           yes   yes    yes    —      —
+  Q8     self-join + scalar agg      yes   yes    yes    —      —
+  Q9     keyed group-by aggs         yes   yes    yes    yes    —
+  Q10    group-by + HAVING filter    yes   yes    yes    yes    —
+  Q11    group-by + order-by + k     yes   yes    yes    yes    —
+  Q12    windowed grouped slice      yes   yes    yes    yes    yes
+  =====  ==========================  ====  =====  =====  =====  =====
+
+(Q9/Q10 are "ordered: yes" in the sense that adding ``order by`` /
+``limit`` clauses to their templates lowers and serves; Q9's ``avg``
+and Q10's HAVING make them non-mergeable for windowed streaming.)
 """
 from __future__ import annotations
 
@@ -103,7 +123,7 @@ from repro.core import xdm
 from repro.core.executor import (CompiledPlan, ExecConfig, Executor,
                                  ResultSet)
 from repro.core.physical import (estimate_group_cap, estimate_scan_cap,
-                                 round_cap)
+                                 estimate_topk_cap, round_cap)
 from repro.core.prepared import (PreparedQuery, bind_params, prepare_plan,
                                  stack_params)
 from repro.core.rewrite import optimize
@@ -157,7 +177,8 @@ class QueryService:
                  mode: str = "sim", mesh=None, max_retries: int = 8,
                  growth: int = 4, presize: bool = True,
                  cache_capacity: int = 64, parameterize: bool = True,
-                 binding_stats_capacity: int = 4096):
+                 binding_stats_capacity: int = 4096,
+                 pushdown_topk: bool = True):
         assert growth > 1, "capacity growth must be geometric"
         assert cache_capacity >= 1
         assert binding_stats_capacity >= 1
@@ -168,6 +189,11 @@ class QueryService:
         self.max_retries = max_retries
         self.growth = growth
         self.presize = presize
+        # top-k pushdown: presize the ordered-output tile (topk_cap)
+        # to ~limit k instead of the full segment width. False keeps
+        # full-sort-then-slice — the ablation baseline of the
+        # "ordered" benchmark suite
+        self.pushdown_topk = pushdown_topk
         self.cache_capacity = cache_capacity
         self.parameterize = parameterize
         self.executor = Executor(db, self.base_config)
@@ -351,7 +377,7 @@ class QueryService:
         unnest whose source collection is ambiguous, or a group-by key
         that resolves to no statistics tag) falls back per-capacity to
         the base config's safe behavior (padded table / full string
-        dictionary)."""
+        dictionary / uncompacted probe / full-width sort)."""
         cfg = self.base_config
         if not self.presize:
             return cfg
@@ -376,21 +402,58 @@ class QueryService:
             if gcap is not None:
                 cfg = dataclasses.replace(
                     cfg, group_cap=min(gcap, self._group_ceiling))
+        if cfg.join_cap is None and cfg.scan_cap is not None and any(
+                isinstance(op, A.Join) for op in A.walk(plan)):
+            # compacted probe-output capacity from the same scan
+            # statistics: matched rows per partition are bounded by
+            # the probe tile's width (scan_cap under broadcast; the
+            # all-gathered width under grace repartition, where key
+            # skew can land every match on one partition). First-shot
+            # caps start statistics-sized, not at a hardcoded floor —
+            # the regrowth ladder is the skew backstop, not the
+            # common path.
+            mult = (self.executor.num_partitions
+                    if cfg.join_strategy == "repartition" else 1)
+            cfg = dataclasses.replace(cfg, join_cap=min(
+                round_cap(cfg.scan_cap * mult), self._joincap_ceiling))
+        if cfg.topk_cap is None and self.pushdown_topk:
+            lim, ordered = self._order_limit(plan)
+            if ordered:
+                tags = self._group_key_tags(plan)
+                tcaps = ([estimate_topk_cap(self.db, t, lim)
+                          for t in tags] if tags else
+                         [round_cap(lim)] if lim is not None else [])
+                known = [c for c in tcaps if c is not None]
+                if known:
+                    cfg = dataclasses.replace(cfg, topk_cap=min(
+                        max(known), self._group_ceiling))
         return cfg
 
-    def _group_bound(self, plan: A.Op) -> Optional[int]:
-        """Segment capacity for every GROUP-BY in the plan: resolve
-        each key expression (through ASSIGN chains) to its child-chain
-        tag and take the build-time global distinct-value bound. None
-        when the plan has no GROUP-BY or any key is unresolvable (the
-        full-dictionary layout then keeps results exact)."""
+    @staticmethod
+    def _order_limit(plan: A.Op) -> tuple[Optional[int], bool]:
+        """(limit k, has ORDER-BY) of a plan — the top-k pushdown's
+        inputs. A LIMIT always sits on an ORDER-BY (translator
+        invariant), so k bounds the ordered output's row need."""
+        lim, ordered = None, False
+        for op in A.walk(plan):
+            if isinstance(op, A.Limit):
+                lim = op.k
+            elif isinstance(op, A.OrderBy):
+                ordered = True
+        return lim, ordered
+
+    def _group_key_tags(self, plan: A.Op) -> Optional[list[str]]:
+        """The statistics tag of every GROUP-BY key in the plan:
+        each key expression resolved through ASSIGN chains to its
+        child-chain's final tag. None when the plan has no GROUP-BY
+        or any key is unresolvable."""
         gbs = [op for op in A.walk(plan) if isinstance(op, A.GroupBy)]
         if not gbs:
             return None
         from repro.core.rewrite.parallel_rules import _child_chain
         assigns = {op.var: op.expr for op in A.walk(plan)
                    if isinstance(op, A.Assign)}
-        bounds: list[int] = []
+        tags: list[str] = []
         for gb in gbs:
             e = gb.key_expr
             seen: set[int] = set()
@@ -401,7 +464,20 @@ class QueryService:
             got = _child_chain(e) if isinstance(e, A.Call) else None
             if got is None or not got[1]:
                 return None
-            est = estimate_group_cap(self.db, got[1][-1])
+            tags.append(got[1][-1])
+        return tags
+
+    def _group_bound(self, plan: A.Op) -> Optional[int]:
+        """Segment capacity for every GROUP-BY in the plan, from the
+        build-time global distinct-value bounds of the resolved key
+        tags. None when unresolvable (the full-dictionary layout then
+        keeps results exact)."""
+        tags = self._group_key_tags(plan)
+        if tags is None:
+            return None
+        bounds: list[int] = []
+        for tag in tags:
+            est = estimate_group_cap(self.db, tag)
             if est is None:
                 return None
             bounds.append(est)
@@ -454,11 +530,21 @@ class QueryService:
             if new_gcap > cfg.group_cap:
                 cfg = dataclasses.replace(cfg, group_cap=new_gcap)
                 grew = True
+        if rs.overflow_topk_cap and cfg.topk_cap is not None:
+            # the sorted tile clips to its child's width, so the full
+            # string dictionary — the widest any segment space gets —
+            # is the ceiling where topk overflow becomes impossible
+            new_tcap = min(round_cap(cfg.topk_cap * self.growth),
+                           self._group_ceiling)
+            if new_tcap > cfg.topk_cap:
+                cfg = dataclasses.replace(cfg, topk_cap=new_tcap)
+                grew = True
         if not grew:
             raise QueryOverflowError(
                 "overflow persists with capacities at their ceilings "
                 f"(scan_cap={cfg.scan_cap}, join_cap={cfg.join_cap}, "
                 f"group_cap={cfg.group_cap}, "
+                f"topk_cap={cfg.topk_cap}, "
                 f"join_bucket={cfg.join_bucket}) — result would be "
                 "inexact")
         return cfg
@@ -496,6 +582,7 @@ class QueryService:
             f"still overflowing after {self.max_retries} regrowth "
             f"retries (scan_cap={cfg.scan_cap}, "
             f"join_cap={cfg.join_cap}, group_cap={cfg.group_cap}, "
+            f"topk_cap={cfg.topk_cap}, "
             f"join_bucket={cfg.join_bucket})")
 
     # -- batch admission ---------------------------------------------------
@@ -542,6 +629,7 @@ class QueryService:
             f"batch still overflowing after {self.max_retries} "
             f"regrowth retries (scan_cap={cfg.scan_cap}, "
             f"join_cap={cfg.join_cap}, group_cap={cfg.group_cap}, "
+            f"topk_cap={cfg.topk_cap}, "
             f"join_bucket={cfg.join_bucket})")
 
     def execute_batch(self, requests: Sequence) -> list[ResultSet]:
@@ -597,16 +685,27 @@ class QueryService:
 
     def submit(self, query: Query, bindings: Optional[Sequence] = None,
                *, tenant: str = "default", at: Optional[float] = None,
-               slo: Optional[float] = None):
+               slo: Optional[float] = None,
+               stream: Optional[str] = None):
         """Asynchronously admit one request into the serving runtime
         (created with defaults on first use). Returns a ``Ticket``
         whose ``result`` is filled by ``drain()``. ``at`` is the
         request's virtual arrival time; ``tenant`` feeds cross-tenant
-        fairness."""
+        fairness; ``stream`` folds the request's grouped result into
+        the named windowed stream (serving/window.py) as one window's
+        partial."""
         if self._runtime is None:
             self.runtime()
         return self._runtime.submit(query, bindings, tenant=tenant,
-                                    at=at, slo=slo)
+                                    at=at, slo=slo, stream=stream)
+
+    def stream_result(self, name: str) -> list:
+        """Finalized grouped rows of a windowed stream accumulated via
+        ``submit(..., stream=name)`` — merged across every absorbed
+        admission window in canonical order."""
+        if self._runtime is None:
+            raise KeyError(name)
+        return self._runtime.stream_result(name)
 
     def drain(self, budget: Optional[int] = None) -> list:
         """Dispatch every admitted request to completion (closing
@@ -657,4 +756,5 @@ def _merged_overflow(rss: Sequence[ResultSet]):
         overflow_scan=any(rs.overflow_scan for rs in rss),
         overflow_join=any(rs.overflow_join for rs in rss),
         overflow_join_cap=any(rs.overflow_join_cap for rs in rss),
-        overflow_group_cap=any(rs.overflow_group_cap for rs in rss))
+        overflow_group_cap=any(rs.overflow_group_cap for rs in rss),
+        overflow_topk_cap=any(rs.overflow_topk_cap for rs in rss))

@@ -17,6 +17,10 @@ runtime that keeps devices saturated across concurrent query
                 issues grouped batches through the service's batched
                 regrowth ladder, plus ``ServingRuntime`` gluing all
                 three behind ``QueryService.submit()/drain()``
+  window.py     streaming-window grouped mode — per-admission-window
+                partial group states (count/sum/min/max) merged
+                associatively across batches, merge-order invariant
+                by construction
 """
 from repro.core.serving.bucketing import (CostBasedBucketing,  # noqa: F401
                                           Pow2Bucketing, next_pow2)
@@ -24,3 +28,5 @@ from repro.core.serving.queue import (AdmissionQueue, Ticket,  # noqa: F401
                                       VirtualClock)
 from repro.core.serving.scheduler import (FairScheduler,  # noqa: F401
                                           RuntimeStats, ServingRuntime)
+from repro.core.serving.window import (GroupSpec,  # noqa: F401
+                                       WindowedGroupState, group_spec_of)

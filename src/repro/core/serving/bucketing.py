@@ -170,10 +170,11 @@ class CostBasedBucketing:
         return next_pow2(size)
 
 
-def padded_rows(dispatches: Sequence[tuple[int, int, int]]) -> int:
-    """Padding-waste metric over a dispatch log of (group_size,
-    bucket, row_cost) triples: total phantom rows executed."""
-    return sum((b - s) * rc for s, b, rc in dispatches)
+def padded_rows(dispatches: Sequence[tuple[str, int, int, int]]) -> int:
+    """Padding-waste metric over a ``ServingRuntime.dispatch_log`` —
+    (signature, group_size, bucket, row_cost) tuples: total phantom
+    rows executed."""
+    return sum((b - s) * rc for _, s, b, rc in dispatches)
 
 
 def make_policy(name: str, **kw) -> object:

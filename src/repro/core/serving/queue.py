@@ -51,6 +51,9 @@ class Ticket:
     ``arrival``/``deadline``/``completion`` are virtual times;
     ``latency`` is the end-to-end virtual latency the SLO governs.
     ``result``/``error`` are filled by the scheduler at dispatch.
+    ``stream`` names the windowed grouped stream this request's
+    partial result folds into (serving/window.py), or None for
+    ordinary one-shot requests.
     """
     seq: int
     tenant: str
@@ -61,6 +64,7 @@ class Ticket:
     result: Any = None
     error: Optional[Exception] = None
     completion: Optional[float] = None
+    stream: Optional[str] = None
 
     @property
     def done(self) -> bool:

@@ -30,6 +30,7 @@ from typing import Optional
 
 from repro.core.serving.bucketing import make_policy
 from repro.core.serving.queue import AdmissionQueue, Ticket, VirtualClock
+from repro.core.serving.window import WindowedGroupState, group_spec_of
 
 
 class FairScheduler:
@@ -41,6 +42,11 @@ class FairScheduler:
         self._queues: "OrderedDict[str, deque[Ticket]]" = OrderedDict()
         self._deficit: dict[str, float] = {}
         self.served: dict[str, int] = {}
+        # rotation cursor: budgeted sweeps start at a different active
+        # tenant each round, so a budget smaller than the sum of
+        # active quanta cannot permanently starve later-offered
+        # tenants (their deficit also carries over until served)
+        self._rotate = 0
 
     def offer(self, tickets: list[Ticket]) -> None:
         for t in tickets:
@@ -52,14 +58,23 @@ class FairScheduler:
     def select(self, budget: Optional[int] = None) -> list[Ticket]:
         """One DRR sweep: every backlogged tenant earns a quantum,
         then spends its deficit FIFO. ``budget`` caps total picks per
-        sweep (None: one full round). Tenants that drain give their
-        leftover credit up — deficit resets on empty, so idle tenants
-        cannot hoard service."""
+        sweep (None: one full round; must be >= 1 — a zero budget
+        would pick nothing forever). Sweeps start at a rotating
+        tenant, so a budget exhausted by the first tenants still
+        reaches the rest on later sweeps. Tenants that drain give
+        their leftover credit up — deficit resets on empty, so idle
+        tenants cannot hoard service."""
+        assert budget is None or budget >= 1, \
+            "budget must be None or >= 1"
         picked: list[Ticket] = []
         active = [t for t, q in self._queues.items() if q]
         for tenant in active:
             self._deficit[tenant] = self._deficit.get(tenant, 0.0) \
                 + self.quantum
+        if active:
+            start = self._rotate % len(active)
+            active = active[start:] + active[:start]
+            self._rotate += 1
         for tenant in active:
             q = self._queues[tenant]
             while q and self._deficit[tenant] >= 1 and (
@@ -124,18 +139,33 @@ class ServingRuntime:
         # the trace a CostBasedBucketing ladder can be fitted from
         # offline (benchmarks/serving_benchmarks.py)
         self.dispatch_log: list[tuple[str, int, int, int]] = []
+        # streaming-window grouped mode: stream name -> running merged
+        # state (serving/window.py). Partials are absorbed as their
+        # tickets complete — in whatever order batches dispatch — and
+        # the state survives drain() so a stream accumulates across
+        # admission horizons. A streamed ticket that errors at
+        # dispatch is recorded here: a stream missing a window is NOT
+        # a smaller exact result, it is a wrong one, so reads fail
+        # loudly instead
+        self._streams: dict[str, WindowedGroupState] = {}
+        self._stream_failed: dict[str, list[int]] = {}
 
     # -- frontend ----------------------------------------------------------
 
     def submit(self, query, bindings=None, *, tenant: str = "default",
-               at: Optional[float] = None, slo: Optional[float] = None
-               ) -> Ticket:
+               at: Optional[float] = None, slo: Optional[float] = None,
+               stream: Optional[str] = None) -> Ticket:
         """Admit one request. ``at`` is its virtual arrival time
         (advancing the clock — open-loop traffic submits in timestamp
         order); ``slo`` overrides the ticket's latency deadline
         (default: admission window + one window of dispatch budget).
         Preparation happens here so admission groups by erased
-        signature, not query text."""
+        signature, not query text. ``stream`` files the request's
+        grouped result as one window's partial of the named windowed
+        stream (the plan must be associatively mergeable —
+        count/sum/min/max, no HAVING/order/post-group wrappers);
+        streamed requests admit, bucket and dispatch exactly like
+        every other request."""
         if at is not None:
             # an arrival that crosses pending window deadlines closes
             # and dispatches them AT those deadlines first — the clock
@@ -152,10 +182,24 @@ class ServingRuntime:
         now = self.clock.now()
         pq = self.service.prepare(query)
         values = self.service._values_for(pq, bindings)
+        if stream is not None:
+            spec = group_spec_of(pq.plan)   # raises on non-mergeable
+            st = self._streams.get(stream)
+            if st is None:
+                self._streams[stream] = WindowedGroupState(spec)
+            elif st.spec != spec:
+                raise ValueError(
+                    f"stream {stream!r} already carries a different "
+                    f"grouped result layout")
         deadline = now + (slo if slo is not None
                           else 2.0 * self.queue.window)
-        t = Ticket(seq=len(self._tickets), tenant=tenant, query=pq,
-                   values=values, arrival=now, deadline=deadline)
+        # seq is the runtime-lifetime submission ordinal (NOT the index
+        # into the current horizon's ticket list, which drain resets):
+        # it doubles as the stream window id, which must stay unique
+        # across drains
+        t = Ticket(seq=self.stats.submitted, tenant=tenant, query=pq,
+                   values=values, arrival=now, deadline=deadline,
+                   stream=stream)
         self._tickets.append(t)
         self.queue.submit(t)
         self.stats.submitted += 1
@@ -170,7 +214,8 @@ class ServingRuntime:
 
     def step(self, budget: Optional[int] = None) -> int:
         """Close due windows, run one DRR sweep, dispatch the picked
-        tickets grouped by signature. Returns tickets completed."""
+        tickets grouped by signature. Returns tickets processed
+        (completed or errored — progress either way)."""
         self.scheduler.offer(self.queue.pop_due())
         picked = self.scheduler.select(budget)
         if not picked:
@@ -216,14 +261,57 @@ class ServingRuntime:
                     t.error = e
         if self.measure_service_time:
             self.clock.advance(time.perf_counter() - t0)
-        self.stats.real_rows += len(tickets) * row_cost
+        # only work that actually completed counts as executed rows /
+        # dispatched requests — an errored group must not inflate
+        # throughput or deflate padding_waste in the benchmark record
+        completed = sum(1 for t in tickets if t.result is not None)
+        self.stats.real_rows += completed * row_cost
         now = self.clock.now()
         for t in tickets:
             t.completion = now
             if now > t.deadline:
                 self.stats.slo_misses += 1
-        self.stats.dispatched += len(tickets)
+            if t.stream is not None:
+                if t.result is not None:
+                    # fold this window's partial groups into the
+                    # stream — dispatch order is whatever the
+                    # scheduler produced, which is exactly why the
+                    # state is merge-order invariant by construction
+                    self._streams[t.stream].absorb(t.seq,
+                                                   t.result.rows())
+                else:
+                    # a lost window poisons the stream's totals;
+                    # remember it so stream_result refuses
+                    self._stream_failed.setdefault(
+                        t.stream, []).append(t.seq)
+        self.stats.dispatched += completed
+        # processed count (incl. errored tickets): the drain loop must
+        # keep sweeping remaining backlog even when one group errors
         return len(tickets)
+
+    # -- windowed grouped streams ------------------------------------------
+
+    def stream_state(self, name: str) -> WindowedGroupState:
+        """The named stream's running merged state (raises KeyError
+        for unknown streams). States persist across ``drain()`` calls
+        so a stream keeps accumulating over admission horizons."""
+        return self._streams[name]
+
+    def stream_result(self, name: str) -> list[tuple]:
+        """Finalized grouped rows of the named stream: every absorbed
+        window's partials folded in canonical order — for f32-exact
+        data, bit-identical to the one-shot grouped query over the
+        union of the windows. Raises RuntimeError when any of the
+        stream's windows failed at dispatch: totals missing a window
+        are wrong, not merely partial (the per-ticket ``error`` has
+        the cause)."""
+        failed = self._stream_failed.get(name)
+        if failed:
+            raise RuntimeError(
+                f"stream {name!r} lost window(s) {sorted(failed)} to "
+                f"dispatch errors; its totals would be silently "
+                f"wrong — see the failed tickets' .error")
+        return self._streams[name].finalize()
 
     # -- drain -------------------------------------------------------------
 

@@ -28,8 +28,9 @@ import dataclasses
 from repro.core import xqparser as xq
 from repro.core.algebra import (Aggregate, Assign, Call, Const,
                                 DistributeResult, EmptyTupleSource, Expr,
-                                GroupBy, NestedTupleSource, Op, Select,
-                                Some, Subplan, Unnest, Var)
+                                GroupBy, Limit, NestedTupleSource, Op,
+                                OrderBy, Select, Some, Subplan, Unnest,
+                                Var)
 
 _CMP = {"eq": "value-eq", "ne": "value-ne", "lt": "value-lt",
         "le": "value-le", "gt": "value-gt", "ge": "value-ge"}
@@ -220,6 +221,10 @@ class Translator:
             elif cl[0] == "where":
                 plan, e, _ = self.expr(cl[1], env, plan)
                 plan = Select(Call("boolean", (e,)), plan)
+            elif cl[0] in ("orderby", "limit"):
+                raise NotImplementedError(
+                    "order by / limit are supported after group by "
+                    "only (ordered grouped output)")
             else:
                 raise ValueError(cl)
         # return clause
@@ -239,13 +244,16 @@ class Translator:
     def _group_by(self, cl, rest: tuple, ast: xq.Flwor, env: _Env,
                   plan: Op) -> tuple[Op, list[int]]:
         """XQuery 3.0-lite group-by (paper §6 future work). Return
-        items — and any HAVING-style ``where`` clauses *after* the
-        group-by — are expressions over the grouping key and aggregate
-        functions of per-tuple expressions. Lowered to the keyed
-        two-step GROUP-BY operator (segmented reduce locally, psum
-        globally — rule 4.2.2 generalized), with post-group SELECTs
-        for the HAVING filters and post-group ASSIGNs for non-variable
-        return expressions (e.g. ``avg(..) div 10``)."""
+        items — and any HAVING-style ``where``, ``order by`` and
+        ``limit`` clauses *after* the group-by — are expressions over
+        the grouping key and aggregate functions of per-tuple
+        expressions. Lowered to the keyed two-step GROUP-BY operator
+        (segmented reduce locally, psum globally — rule 4.2.2
+        generalized), with post-group SELECTs for the HAVING filters,
+        post-group ASSIGNs for non-variable return expressions (e.g.
+        ``avg(..) div 10``), ORDER-BY over the grouped stream (keys
+        share aggregate slots with HAVING/return; the grouping key is
+        appended as a total-order tiebreak) and LIMIT for top-k."""
         _, gname, key_ast = cl
         plan, key_e, _ = self.expr(key_ast, env, plan)
         key_var = self.new_var()
@@ -286,12 +294,30 @@ class Translator:
                 f"grouping key and aggregates, got {a}")
 
         havings: list[Expr] = []
+        order_keys: list[tuple[Expr, bool]] = []
+        limit_k: int | None = None
         for rc in rest:
-            if rc[0] != "where":
+            if rc[0] == "where":
+                if order_keys or limit_k is not None:
+                    raise NotImplementedError(
+                        "HAVING where must precede order by / limit")
+                havings.append(post(rc[1]))
+            elif rc[0] == "orderby":
+                order_keys.append((post(rc[1]), rc[2]))
+            elif rc[0] == "limit":
+                if not order_keys:
+                    raise NotImplementedError(
+                        "limit without order by has no deterministic "
+                        "row selection; add an order by clause")
+                if limit_k is not None:
+                    raise NotImplementedError("duplicate limit clause")
+                if rc[1] < 1:
+                    raise ValueError(f"limit must be >= 1, got {rc[1]}")
+                limit_k = rc[1]
+            else:
                 raise NotImplementedError(
-                    f"only where (HAVING) may follow group by, "
-                    f"got {rc[0]}")
-            havings.append(post(rc[1]))
+                    f"only where (HAVING) / order by / limit may "
+                    f"follow group by, got {rc[0]}")
         items = (ast.ret.items if isinstance(ast.ret, xq.Seq)
                  else (ast.ret,))
         ret_vars: list[int] = []
@@ -309,6 +335,14 @@ class Translator:
             plan = Select(Call("boolean", (hv,)), plan)
         for rv, e in deferred:
             plan = Assign(rv, e, plan)
+        if order_keys:
+            # the grouping key (unique per output tuple) as a final
+            # ascending tiebreak makes the ordering total, so device
+            # sort, host oracles and batch layouts all agree exactly
+            order_keys.append((Var(key_var), False))
+            plan = OrderBy(tuple(order_keys), plan)
+        if limit_k is not None:
+            plan = Limit(limit_k, plan)
         return plan, ret_vars
 
     # -- entry point -------------------------------------------------------

@@ -165,6 +165,51 @@ return ($st, sum($r/value), max($r/value))
 '''
 
 
+def q11_variant(datatype: str, k: int = 3) -> str:
+    """Q11 template: top-k stations by aggregate (ordered group-by).
+    The datatype literal lifts into the parameter vector; the limit
+    ``k`` is structural (it bounds the compiled output shape) and
+    stays part of the plan signature — all serving-path variants keep
+    the canonical k so the template compiles once."""
+    return f'''
+for $r in collection("/sensors")/dataCollection/data
+where $r/dataType eq "{datatype}"
+group by $st := $r/station
+order by sum($r/value) descending
+limit {k}
+return ($st, count($r), sum($r/value))
+'''
+
+
+def q11c_variant(datatype: str, k: int = 3) -> str:
+    """Q11 count-ordered sibling: ascending order on a duplicate-heavy
+    aggregate (counts collide constantly), so the grouping-key
+    tiebreak decides most of the ranking — the adversarial case for
+    cross-engine order agreement."""
+    return f'''
+for $r in collection("/sensors")/dataCollection/data
+where $r/dataType eq "{datatype}"
+group by $st := $r/station
+order by count($r) ascending
+limit {k}
+return ($st, count($r), max($r/value))
+'''
+
+
+def q12_variant(datatype: str, year: int) -> str:
+    """Q12 template: one admission window's slice of the windowed
+    grouped stream — a year-sliced mergeable grouped query (count/
+    sum/min/max only), whose per-window partial groups merge
+    associatively across batches in serving/window.py."""
+    return f'''
+for $r in collection("/sensors")/dataCollection/data
+where $r/dataType eq "{datatype}"
+ and year-from-dateTime(dateTime(data($r/date))) eq {year}
+group by $st := $r/station
+return ($st, count($r), sum($r/value), min($r/value), max($r/value))
+'''
+
+
 def gq6_variant(datatype: str, year: int) -> str:
     """Q6-style grouped join: per-station-name aggregation over the
     stations-to-sensors hash join."""
@@ -214,6 +259,12 @@ def variant_text(name: str, k: int, stations: Sequence[str],
         return q9_variant(dt)
     if name == "Q10":
         return q10_variant(dt, 25.0 * (k % 8))
+    if name == "Q11":
+        return q11_variant(dt)
+    if name == "Q11c":
+        return q11c_variant(dt)
+    if name == "Q12":
+        return q12_variant(("PRCP", "TMAX", "TMIN")[k % 3], y)
     raise KeyError(name)
 
 
@@ -290,6 +341,29 @@ def make_groupby_workload(years: Sequence[int], total: int = 64
             out.append(("Q9d", q9d_variant(DTYPES[k9 % len(DTYPES)],
                                            10 + k9 % 9)))
             k9 += 1
+    return out
+
+
+def make_ordered_workload(total: int = 64) -> list[tuple[str, str]]:
+    """``total`` (template_name, query_text) pairs cycling through the
+    two ordered group-by templates (sum-descending top-k Q11,
+    count-ascending top-k Q11c) with rotating datatype constants —
+    the "ordered" benchmark suite's workload (top-k pushdown vs
+    full-sort-then-slice). NOTE: only the datatype literal is
+    liftable (the limit k is structural), so texts repeat after the
+    5 DTYPES — fine for this suite, which compares two prepared
+    services on identical traffic and never runs an exact-signature
+    baseline whose compile count repeats would understate."""
+    out: list[tuple[str, str]] = []
+    k11 = k11c = 0
+    while len(out) < total:
+        if len(out) % 2 == 0:
+            out.append(("Q11", q11_variant(DTYPES[k11 % len(DTYPES)])))
+            k11 += 1
+        else:
+            out.append(("Q11c",
+                        q11c_variant(DTYPES[k11c % len(DTYPES)])))
+            k11c += 1
     return out
 
 

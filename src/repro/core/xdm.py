@@ -93,7 +93,15 @@ class StringDict:
             if m:
                 y, mo, d = int(m.group(1)), int(m.group(2)), int(m.group(3))
                 date[i] = y * 10000 + mo * 100 + d
-        return {"ucase_sid": ucase, "num_of_sid": num, "date_of_sid": date}
+        # lexicographic rank per sid: string ORDER BY keys (and the
+        # grouping-key tiebreak of ordered group-by output) compare by
+        # rank on device, matching host-side str comparison exactly
+        # (numpy unicode order == python code-point order)
+        rank = np.empty(n, np.int32)
+        rank[np.argsort(np.asarray(self._strings))] = np.arange(
+            n, dtype=np.int32)
+        return {"ucase_sid": ucase, "num_of_sid": num,
+                "date_of_sid": date, "rank_of_sid": rank}
 
 
 def pack_date(y: int, m: int, d: int) -> int:

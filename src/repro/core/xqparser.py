@@ -68,6 +68,9 @@ class Seq(Ast):
 class Flwor(Ast):
     clauses: tuple[tuple, ...]   # ("for", name, Ast) | ("let", name, Ast)
     #                            | ("where", Ast)
+    #                            | ("groupby", name, Ast)
+    #                            | ("orderby", Ast, descending: bool)
+    #                            | ("limit", int)
     ret: Ast
 
 
@@ -83,7 +86,7 @@ _TOKEN_RE = re.compile(r"""
 """, re.VERBOSE)
 
 KEYWORDS = {"for", "let", "where", "return", "in", "satisfies", "some",
-            "group", "by",
+            "group", "by", "order", "ascending", "descending", "limit",
             "eq", "ne", "lt", "le", "gt", "ge", "and", "or", "div"}
 
 
@@ -184,6 +187,25 @@ class Parser:
                 name = self.varname()
                 self.expect("assign")
                 clauses.append(("groupby", name, self.expr()))
+            elif k == "kw" and v == "order":
+                self.next()
+                self.expect("kw", "by")
+                while True:
+                    e = self.expr()
+                    desc = False
+                    if self.accept("kw", "descending"):
+                        desc = True
+                    else:
+                        self.accept("kw", "ascending")
+                    clauses.append(("orderby", e, desc))
+                    if not self.accept("sym", ","):
+                        break
+            elif k == "kw" and v == "limit":
+                self.next()
+                n = self.expect("number")
+                if "." in n:
+                    raise SyntaxError(f"limit wants an integer, got {n}")
+                clauses.append(("limit", int(n)))
             elif k == "kw" and v == "return":
                 self.next()
                 return Flwor(tuple(clauses), self.expr())

@@ -22,6 +22,12 @@ is driven through a seeded grid of constant bindings and checked for
   5. scheduled-vs-direct: the async runtime (admission windows ->
      DRR fairness -> bucketed dispatch) must return, per ticket,
      exactly the direct per-request result.
+  6. ordered/limited group-by (Q11/Q12): the top-k pushdown
+     (statistics-presized topk_cap) must return, in order, exactly
+     what full-sort-then-slice (pushdown_topk=False) returns, across
+     the prepared, batched and scheduled paths — rows() comparisons
+     are list comparisons, so every parity above is already
+     order-sensitive; this parity pins the pushdown itself.
 
 The unmarked fast subset keeps the default loop quick; the full
 >=20-case grid per query is slow-marked (scripts/ci.sh --differential
@@ -39,7 +45,8 @@ YEARS = (1976, 1999, 2000, 2001, 2003, 2004)
 FAST_N = 2      # unmarked slice: variants per query
 FULL_N = 20     # slow grid: >=20 seeded cases per query
 
-TINY = ExecConfig(scan_cap=8, join_bucket=1, join_cap=32, group_cap=2)
+TINY = ExecConfig(scan_cap=8, join_bucket=1, join_cap=32, group_cap=2,
+                  topk_cap=2)
 
 
 def grid(name: str, n: int) -> list[str]:
@@ -117,6 +124,49 @@ def test_differential_fast(weather_db, services, name):
 @pytest.mark.parametrize("name", list(ALL))
 def test_differential_full_grid(weather_db, services, name):
     texts = _run_grid(weather_db, services, name, FULL_N)
+    assert len(texts) >= 20
+
+
+# -- parity 6: ordered/limited group-by, pushdown vs full sort ---------
+
+
+@pytest.fixture(scope="module")
+def fullsort(weather_db):
+    """The full-sort-then-slice side of parity 6: topk presizing off,
+    so the sorted tile keeps the full segment width and LIMIT masks
+    rows after the sort."""
+    return QueryService(weather_db, pushdown_topk=False)
+
+
+def _run_ordered_grid(services, fullsort, name, n):
+    texts = grid(name, n)
+    # prepared path (topk-pushdown presized) vs full-sort-then-slice,
+    # order-sensitive list comparison
+    direct = [services["prepared"].execute(t) for t in texts]
+    for t, d in zip(texts, direct):
+        assert d.rows() == fullsort.execute(t).rows(), (name, t)
+    # batched and scheduled paths agree with the pushdown result too
+    for d, b in zip(direct, services["batch"].execute_batch(texts)):
+        assert d.rows() == b.rows(), name
+    sched = services["sched"]
+    tickets = [sched.submit(t, tenant="AB"[i % 2])
+               for i, t in enumerate(texts)]
+    sched.drain()
+    for d, tk in zip(direct, tickets):
+        assert tk.error is None, (name, tk.error)
+        assert d.rows() == tk.result.rows(), name
+    return texts
+
+
+@pytest.mark.parametrize("name", ["Q11", "Q12"])
+def test_differential_ordered_fast(services, fullsort, name):
+    _run_ordered_grid(services, fullsort, name, FAST_N)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", ["Q11", "Q12"])
+def test_differential_ordered_full_grid(services, fullsort, name):
+    texts = _run_ordered_grid(services, fullsort, name, FULL_N)
     assert len(texts) >= 20
 
 

@@ -68,6 +68,38 @@ def test_virtual_clock_is_monotonic():
 # -- deficit round-robin fairness --------------------------------------------
 
 
+def test_drr_budgeted_sweeps_rotate_start_tenant():
+    """A per-sweep budget smaller than one tenant's quantum must not
+    permanently starve later-offered tenants: sweep starts rotate, so
+    every backlogged tenant is served within a bounded number of
+    budgeted sweeps (the no-starvation guarantee extended to
+    budget < sum of active quanta)."""
+    sched = FairScheduler(quantum=4)
+    sched.offer([tk(i, "A") for i in range(40)])
+    sched.offer([tk(100 + i, "B") for i in range(40)])
+    for _ in range(10):
+        got = sched.select(budget=4)
+        assert len(got) == 4
+    assert sched.served.get("A", 0) > 0
+    assert sched.served.get("B", 0) > 0
+    assert abs(sched.served["A"] - sched.served["B"]) <= 4
+
+
+def test_drr_zero_budget_rejected():
+    sched = FairScheduler()
+    sched.offer([tk(0, "A")])
+    with pytest.raises(AssertionError):
+        sched.select(budget=0)
+
+
+def test_padded_rows_metric_reads_dispatch_log():
+    """The padding metric unpacks the runtime's actual 4-tuple
+    dispatch-log records (sig, size, bucket, row_cost)."""
+    from repro.core.serving.bucketing import padded_rows
+    log = [("sigA", 3, 4, 10), ("sigB", 2, 2, 7), ("sigA", 1, 4, 10)]
+    assert padded_rows(log) == (4 - 3) * 10 + 0 + (4 - 1) * 10
+
+
 def test_drr_no_tenant_starved_under_adversarial_mix():
     """Flooding tenant A (90 requests, all queued first) must not
     starve B (10 requests): while both have backlog, per-sweep service
