@@ -24,7 +24,16 @@
 #                                 ladder monotonicity) as their own
 #                                 stage — the fast slices; full grids
 #                                 are slow-marked (FULL=1)
+#   scripts/ci.sh --lint          run ONLY the static stage: the
+#                                 tracing-hazard/determinism linter
+#                                 (file:line findings, nonzero exit)
+#                                 plus the whole-suite plan verifier
+#                                 (rewrite soundness on, presizing
+#                                 cross-validated) — no test run
 #   scripts/ci.sh tests/...       any extra pytest args pass through
+#
+# The default loop runs the linter first (seconds, catches tracing
+# hazards before any compile) and the plan verifier after the tests.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -32,19 +41,26 @@ DIFFERENTIAL=0
 SCHEDULER=0
 PROPERTIES=0
 while [ "${1:-}" = "--differential" ] || [ "${1:-}" = "--scheduler" ] \
-        || [ "${1:-}" = "--properties" ]; do
+        || [ "${1:-}" = "--properties" ] || [ "${1:-}" = "--lint" ]; do
     if [ "$1" = "--differential" ]; then DIFFERENTIAL=1; fi
     if [ "$1" = "--scheduler" ]; then SCHEDULER=1; fi
     if [ "$1" = "--properties" ]; then PROPERTIES=1; fi
+    if [ "$1" = "--lint" ]; then
+        python -m repro.core.analysis.lint src/repro
+        python -m repro.core.analysis.verify
+        exit 0
+    fi
     shift
 done
 MARK=()
 if [ "${FULL:-0}" = "1" ]; then
     MARK=(-m "slow or not slow")
 fi
+python -m repro.core.analysis.lint src/repro
 # ${MARK[@]+...} keeps set -u happy on bash < 4.4 when MARK is empty
 python -m pytest -x -q --durations=10 \
     ${MARK[@]+"${MARK[@]}"} "$@"
+python -m repro.core.analysis.verify
 python -m benchmarks.serving_benchmarks --smoke --suite all
 if [ "$DIFFERENTIAL" = "1" ]; then
     python -m pytest -x -q tests/test_differential.py

@@ -1,0 +1,39 @@
+"""Static plan analysis (prepare-time verifier + repo linter).
+
+* ``schema``  — bottom-up schema/type inference over algebra plans
+* ``capflow`` — which ExecConfig caps a plan can overflow, with static
+  cardinality bounds from CollectionStats
+* ``check``   — rewrite soundness (schema equivalence + capacity-set
+  monotonicity per rule firing) and the prepare-time ``verify_plan``
+* ``lint``    — ast-level tracing-hazard / determinism / cap-registry
+  linter over src/repro (host-only, no jax import)
+* ``verify``  — the CI runner (``python -m repro.core.analysis.verify``)
+
+Attribute access is lazy so that ``lint`` stays importable without
+pulling in jax.
+"""
+from __future__ import annotations
+
+import importlib
+
+_EXPORTS = {
+    "ColType": ("repro.core.analysis.schema", "ColType"),
+    "infer_schema": ("repro.core.analysis.schema", "infer_schema"),
+    "check_param_uses": ("repro.core.analysis.schema",
+                         "check_param_uses"),
+    "CapFlow": ("repro.core.analysis.capflow", "CapFlow"),
+    "CapSite": ("repro.core.analysis.capflow", "CapSite"),
+    "analyze_capflow": ("repro.core.analysis.capflow", "analyze"),
+    "check_rewrite": ("repro.core.analysis.check", "check_rewrite"),
+    "verify_plan": ("repro.core.analysis.check", "verify_plan"),
+}
+
+__all__ = list(_EXPORTS)
+
+
+def __getattr__(name: str):
+    try:
+        mod, attr = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(name) from None
+    return getattr(importlib.import_module(mod), attr)

@@ -1,0 +1,89 @@
+"""Whole-suite static verification driver (the CI entry).
+
+``python -m repro.core.analysis.verify`` builds a small weather
+database, then for every paper query Q1–Q12:
+
+1. translates + optimizes with **rewrite soundness checks on** — every
+   rule firing must preserve the result schema and keep the capacity
+   set monotone (analysis/check.check_rewrite);
+2. lifts parameters and re-verifies declared Param types against use
+   sites (prepared.prepare_plan -> schema.check_param_uses);
+3. runs the prepare-time verifier (schema inference + capacity-flow +
+   overflow-registry agreement);
+4. cross-validates the capacity-flow static bounds against the
+   statistics-presized ExecConfig the serving tier would actually use
+   — a presized cap below a static bound is a first-shot overflow the
+   statistics should have prevented.
+
+It also asserts the analysis-side capacity registry literally equals
+the executor's ``OVERFLOW_FLAGS`` (completeness both ways: no orphan
+knob, no unanalyzable flag).
+
+Prints one summary line per query and exits nonzero on any failure.
+Unlike the linter this imports the executor (and therefore jax): it is
+the dynamic half of ``scripts/ci.sh --lint``.
+"""
+from __future__ import annotations
+
+import sys
+
+
+def run(argv=None) -> int:
+    from repro.core import executor, queries
+    from repro.core.analysis import capflow
+    from repro.core.analysis.check import verify_plan
+    from repro.core.errors import QueryError
+    from repro.core.prepared import prepare_plan
+    from repro.core.rewrite import optimize
+    from repro.core.rewrite.engine import set_soundness_checks
+    from repro.core.service import QueryService
+    from repro.core.translator import translate
+    from repro.data.weather import WeatherSpec, build_database
+
+    if capflow.registry_coverage() != executor.OVERFLOW_FLAGS:
+        print(f"FAIL registry: analysis {capflow.registry_coverage()} "
+              f"!= executor {executor.OVERFLOW_FLAGS}")
+        return 1
+
+    spec = WeatherSpec(num_stations=5, years=(1976, 2000),
+                       days_per_year=2)
+    db = build_database(spec, num_partitions=2)
+    svc = QueryService(db)
+
+    failures = 0
+    prev = set_soundness_checks(True)
+    try:
+        for name in sorted(queries.ALL, key=lambda n: int(n[1:])):
+            text = queries.ALL[name]
+            try:
+                plan = optimize(translate(text))
+                pq = prepare_plan(plan, text)
+                schema = verify_plan(pq.plan, db=db, text=text)
+                flow = capflow.analyze(pq.plan, db=db)
+                problems = capflow.cross_validate(
+                    pq.plan, db, svc._presized_config(pq.plan))
+            except QueryError as e:
+                print(f"FAIL {name}: {e}")
+                failures += 1
+                continue
+            if problems:
+                for p in problems:
+                    print(f"FAIL {name}: {p}")
+                failures += 1
+                continue
+            caps = ",".join(sorted(flow.caps)) or "-"
+            print(f"ok   {name}: {len(schema)} result cols, "
+                  f"{len(pq.specs)} params, caps [{caps}]")
+    finally:
+        set_soundness_checks(prev)
+
+    if failures:
+        print(f"{failures} verification failure(s)", file=sys.stderr)
+        return 1
+    print(f"all {len(queries.ALL)} queries statically verified "
+          f"(rewrite soundness on, presizing cross-validated)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(run())

@@ -51,30 +51,59 @@ class ExecConfig:
     join_bucket: int = 4                  # hash-bucket probe width
     use_pallas_join: bool = False         # route probe through kernels/
 
+    def signature(self) -> tuple:
+        """Every config field in declaration order, derived from
+        ``dataclasses.fields`` — a new capacity knob joins the
+        plan-cache key by construction rather than by remembering to
+        extend a hand-maintained tuple (the exact omission the
+        cap-registry lint in core.analysis guards the rest of a knob's
+        obligations against)."""
+        return tuple(getattr(self, f.name)
+                     for f in dataclasses.fields(self))
+
     def cap_key(self) -> tuple:
         """The fields that change compiled shapes/semantics — the
         plan-cache key component (service.py)."""
-        return (self.scan_cap, self.join_cap, self.group_cap,
-                self.topk_cap, self.join_strategy, self.join_bucket,
-                self.use_pallas_join)
+        return self.signature()
+
+
+# Executor-side overflow-flag registry: for every capacity-bounded
+# stage, the ExecConfig knob that bounds it -> the output flag that
+# reports its saturation.  EvalCtx accumulation, `_outputs`, and
+# ResultSet attributes are all driven from this table; the service
+# regrowth ladder must have exactly one rung per entry, capacity-flow
+# analysis (core.analysis.capflow) checks plans against it, and the
+# cap-registry lint (core.analysis.lint) statically cross-checks that
+# all four layers stay in sync.
+OVERFLOW_FLAGS: dict[str, str] = {
+    "scan_cap": "overflow_scan",
+    "join_bucket": "overflow_join",
+    "join_cap": "overflow_join_cap",
+    "group_cap": "overflow_group_cap",
+    "topk_cap": "overflow_topk_cap",
+}
 
 
 @dataclasses.dataclass
 class EvalCtx:
     """Per-trace evaluation context: the active config plus per-stage
-    overflow accumulators. Scan-cap overflow (DATASCAN/UNNEST fixed
-    capacity), join-bucket overflow (probe width), join-cap overflow
-    (compacted probe-output capacity), group-cap overflow (keyed-
-    aggregation segment capacity) and topk-cap overflow (the ordered-
-    output sorted tile) are surfaced as separate output flags so an
-    adaptive layer can regrow exactly the capacity that saturated
-    instead of inflating everything."""
+    overflow accumulators, one list per OVERFLOW_FLAGS entry.
+    Scan-cap overflow (DATASCAN/UNNEST fixed capacity), join-bucket
+    overflow (probe width), join-cap overflow (compacted probe-output
+    capacity), group-cap overflow (keyed-aggregation segment capacity)
+    and topk-cap overflow (the ordered-output sorted tile) are
+    surfaced as separate output flags so an adaptive layer can regrow
+    exactly the capacity that saturated instead of inflating
+    everything."""
     cfg: ExecConfig
-    scan_ovf: list = dataclasses.field(default_factory=list)
-    join_ovf: list = dataclasses.field(default_factory=list)
-    joincap_ovf: list = dataclasses.field(default_factory=list)
-    group_ovf: list = dataclasses.field(default_factory=list)
-    topk_ovf: list = dataclasses.field(default_factory=list)
+    ovf: dict[str, list] = dataclasses.field(
+        default_factory=lambda: {f: [] for f in OVERFLOW_FLAGS.values()})
+
+    def note(self, flag: str, value) -> None:
+        """Record one stage's overflow predicate under its registry
+        flag (unregistered flags are a programming error — the
+        registry is the single source of truth)."""
+        self.ovf[flag].append(value)
 
 
 class Comm:
@@ -425,7 +454,7 @@ class Executor:
             mask = path_match_mask(tab, self.db.names, op.path)
             cap = ctx.cfg.scan_cap or tab["kind"].shape[0]
             idx, valid, ovf = rows_from_mask(mask, cap)
-            ctx.scan_ovf.append(ovf)
+            ctx.note("overflow_scan", ovf)
             return Tile(cols={op.var: Col("node", idx, op.collection)},
                         valid=valid, overflow=below.overflow | ovf)
         if isinstance(op, A.Assign):
@@ -509,7 +538,7 @@ class Executor:
             seg = sid
             govf = jnp.zeros((), jnp.bool_)
             key_col = jnp.arange(nseg, dtype=I32)
-        ctx.group_ovf.append(govf)
+        ctx.note("overflow_group_cap", govf)
 
         def seg_sum_count(vals):
             if ctx.cfg.use_pallas_join:  # reuse the kernel toggle
@@ -589,7 +618,7 @@ class Executor:
             sort_keys.append((key, desc))
         idx, valid, ovf = topk_rows(sort_keys, t.valid,
                                     ctx.cfg.topk_cap, limit)
-        ctx.topk_ovf.append(ovf)
+        ctx.note("overflow_topk_cap", ovf)
 
         def take(c: Col) -> Col:
             if c.kind in ("det", "xnode"):
@@ -650,7 +679,7 @@ class Executor:
             frontier = up & (name_arr == (f if f >= 0 else -99))
         cap = ctx.cfg.scan_cap or n
         idx, valid, ovf = rows_from_mask(frontier, cap)
-        ctx.scan_ovf.append(ovf)
+        ctx.note("overflow_scan", ovf)
         anc = idx
         for _ in names:
             anc = _gather(parent, anc, -1)
@@ -764,7 +793,7 @@ class Executor:
         pos, matched, bovf = hash_join_probe(
             bkeys, bvalid, pkeys, pvalid, cfg.join_bucket,
             use_pallas=cfg.use_pallas_join)
-        ctx.join_ovf.append(bovf)
+        ctx.note("overflow_join", bovf)
 
         def attach(c: Col) -> Col:
             if c.kind in ("det", "xnode"):
@@ -789,7 +818,7 @@ class Executor:
             # the service regrows join_cap — not the scan cap or the
             # bucket width — when it saturates.
             idx, valid2, jovf = rows_from_mask(valid, cfg.join_cap)
-            ctx.joincap_ovf.append(jovf)
+            ctx.note("overflow_join_cap", jovf)
 
             def compact(c: Col) -> Col:
                 if c.kind in ("det", "xnode"):
@@ -828,15 +857,9 @@ class Executor:
             return acc
 
         out: dict[str, Any] = {"valid": tile.valid,
-                               "overflow": tile.overflow,
-                               "overflow_scan": or_all(ctx.scan_ovf),
-                               "overflow_join": or_all(ctx.join_ovf),
-                               "overflow_join_cap":
-                                   or_all(ctx.joincap_ovf),
-                               "overflow_group_cap":
-                                   or_all(ctx.group_ovf),
-                               "overflow_topk_cap":
-                                   or_all(ctx.topk_ovf)}
+                               "overflow": tile.overflow}
+        for flag in OVERFLOW_FLAGS.values():
+            out[flag] = or_all(ctx.ovf[flag])
         for v in plan.vars:
             c = tile.cols[v]
             if c.kind == "node":
@@ -885,14 +908,8 @@ class ResultSet:
         self.schema = schema
         self.overflow = bool(np.any(raw["overflow"]))
         # per-stage flags (absent in pre-refactor raw dicts)
-        self.overflow_scan = bool(np.any(raw.get("overflow_scan", False)))
-        self.overflow_join = bool(np.any(raw.get("overflow_join", False)))
-        self.overflow_join_cap = bool(
-            np.any(raw.get("overflow_join_cap", False)))
-        self.overflow_group_cap = bool(
-            np.any(raw.get("overflow_group_cap", False)))
-        self.overflow_topk_cap = bool(
-            np.any(raw.get("overflow_topk_cap", False)))
+        for flag in OVERFLOW_FLAGS.values():    # overflow_scan, ...
+            setattr(self, flag, bool(np.any(raw.get(flag, False))))
 
     def rows(self) -> list[tuple]:
         assert isinstance(self.plan, A.DistributeResult)

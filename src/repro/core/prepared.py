@@ -175,12 +175,23 @@ def prepare_plan(plan: A.Op, text: Optional[str] = None) -> PreparedQuery:
     """Optimized plan -> PreparedQuery. Idempotent on already-erased
     plans (e.g. a PreparedQuery's own ``.plan``): their Param layout is
     recovered as-is instead of re-lifting, and ``defaults`` is None
-    because the original literals are gone."""
+    because the original literals are gone.  Either way, every lifted
+    ``Param``'s declared type is verified against its use sites via
+    schema inference — an externally built erased plan cannot smuggle
+    a sid parameter into an f32 comparison."""
     existing = collect_params(plan)
     if existing:
-        return PreparedQuery(plan, existing, None, repr(plan), text)
-    erased, specs, defaults = lift_params(plan)
-    return PreparedQuery(erased, specs, defaults, repr(erased), text)
+        pq = PreparedQuery(plan, existing, None, repr(plan), text)
+    else:
+        erased, specs, defaults = lift_params(plan)
+        pq = PreparedQuery(erased, specs, defaults, repr(erased), text)
+    from repro.core.analysis.schema import check_param_uses
+    from repro.core.errors import QueryError
+    try:
+        check_param_uses(pq.plan)
+    except QueryError as e:
+        raise e.with_text(text)
+    return pq
 
 
 def collect_params(plan: A.Op) -> tuple[ParamSpec, ...]:

@@ -88,24 +88,27 @@ axis), "scheduled" = admitted/bucketed/dispatched by the async
 "ordered" = supports ORDER BY on aggregates + LIMIT top-k pushdown,
 "windowed" = mergeable for the streaming-window grouped mode — aggs
 restricted to count/sum/min/max with no HAVING / post-group wrappers,
-so per-window partial groups merge associatively in serving/window.py):
+so per-window partial groups merge associatively in serving/window.py,
+"verified" = the static plan verifier (core/analysis/) proves the plan
+well-typed at prepare time — executor-mode schema inference, capacity-
+flow analysis, overflow-registry agreement — before anything traces):
 
-  =====  ==========================  ====  =====  =====  =====  =====
-  query  shape                       prep  batch  sched  order  windw
-  =====  ==========================  ====  =====  =====  =====  =====
-  Q1     scan + 4-predicate filter   yes   yes    yes    —      —
-  Q2     scan + value filter         yes   yes    yes    —      —
-  Q3     scalar agg (sum div)        yes   yes    yes    —      —
-  Q4     scalar agg (max div)        yes   yes    yes    —      —
-  Q5     hash join + quantifier      yes   yes    yes    —      —
-  Q6     hash join, 3-col rows       yes   yes    yes    —      —
-  Q7     join + scalar agg           yes   yes    yes    —      —
-  Q8     self-join + scalar agg      yes   yes    yes    —      —
-  Q9     keyed group-by aggs         yes   yes    yes    yes    —
-  Q10    group-by + HAVING filter    yes   yes    yes    yes    —
-  Q11    group-by + order-by + k     yes   yes    yes    yes    —
-  Q12    windowed grouped slice      yes   yes    yes    yes    yes
-  =====  ==========================  ====  =====  =====  =====  =====
+  =====  ==========================  ====  =====  =====  =====  =====  =====
+  query  shape                       prep  batch  sched  order  windw  verif
+  =====  ==========================  ====  =====  =====  =====  =====  =====
+  Q1     scan + 4-predicate filter   yes   yes    yes    —      —      yes
+  Q2     scan + value filter         yes   yes    yes    —      —      yes
+  Q3     scalar agg (sum div)        yes   yes    yes    —      —      yes
+  Q4     scalar agg (max div)        yes   yes    yes    —      —      yes
+  Q5     hash join + quantifier      yes   yes    yes    —      —      yes
+  Q6     hash join, 3-col rows       yes   yes    yes    —      —      yes
+  Q7     join + scalar agg           yes   yes    yes    —      —      yes
+  Q8     self-join + scalar agg      yes   yes    yes    —      —      yes
+  Q9     keyed group-by aggs         yes   yes    yes    yes    —      yes
+  Q10    group-by + HAVING filter    yes   yes    yes    yes    —      yes
+  Q11    group-by + order-by + k     yes   yes    yes    yes    —      yes
+  Q12    windowed grouped slice      yes   yes    yes    yes    yes    yes
+  =====  ==========================  ====  =====  =====  =====  =====  =====
 
 (Q9/Q10 are "ordered: yes" in the sense that adding ``order by`` /
 ``limit`` clauses to their templates lowers and serves; Q9's ``avg``
@@ -178,7 +181,7 @@ class QueryService:
                  growth: int = 4, presize: bool = True,
                  cache_capacity: int = 64, parameterize: bool = True,
                  binding_stats_capacity: int = 4096,
-                 pushdown_topk: bool = True):
+                 pushdown_topk: bool = True, verify: bool = True):
         assert growth > 1, "capacity growth must be geometric"
         assert cache_capacity >= 1
         assert binding_stats_capacity >= 1
@@ -196,6 +199,11 @@ class QueryService:
         self.pushdown_topk = pushdown_topk
         self.cache_capacity = cache_capacity
         self.parameterize = parameterize
+        # prepare-time static verification (analysis/check.verify_plan):
+        # schema inference + capacity-flow + registry agreement, run
+        # once per prepared plan — memoization keeps the warm execute
+        # path free of it. Off only for ablation/benchmark isolation.
+        self.verify = verify
         self.executor = Executor(db, self.base_config)
         self.stats = ServiceStats()
         # level-1 cache: erased signature -> compiled plan, LRU-bounded
@@ -289,10 +297,18 @@ class QueryService:
                       text: Optional[str]) -> PreparedQuery:
         if not self.parameterize:
             # ablation mode: exact-signature cache, constants baked
-            return PreparedQuery(plan, (), (), repr(plan), text)
-        # prepare_plan is idempotent: an already-erased plan (a
-        # PreparedQuery's .plan fed back in) keeps its Param layout
-        return prepare_plan(plan, text)
+            pq = PreparedQuery(plan, (), (), repr(plan), text)
+        else:
+            # prepare_plan is idempotent: an already-erased plan (a
+            # PreparedQuery's .plan fed back in) keeps its Param layout
+            pq = prepare_plan(plan, text)
+        if self.verify:
+            # static plan verifier — both callers of _prepare_plan
+            # memoize, so this runs once per template, never on the
+            # warm path
+            from repro.core.analysis.check import verify_plan
+            verify_plan(pq.plan, db=self.db, text=text)
+        return pq
 
     @staticmethod
     def _values_for(pq: PreparedQuery,
@@ -732,7 +748,18 @@ class QueryService:
         cost = self._row_cost.get(sig)
         if cost is None:
             cfg = self._presized_config(pq.plan)
-            cost = cfg.scan_cap or self._scan_ceiling
+            cost = cfg.scan_cap
+            if cost is None:
+                # presize estimation failed (no stats / ambiguous
+                # unnest source): fall back to the capacity-flow
+                # analysis' static scan bound before assuming the
+                # full padded table
+                from repro.core.analysis import capflow
+                bound = capflow.analyze(
+                    pq.plan, db=self.db).bound_for("scan_cap")
+                if bound is not None:
+                    cost = round_cap(bound)
+            cost = cost or self._scan_ceiling
             self._row_cost[sig] = cost
             while len(self._row_cost) > self._good_cfg_capacity:
                 self._row_cost.popitem(last=False)

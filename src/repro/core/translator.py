@@ -26,11 +26,12 @@ from __future__ import annotations
 import dataclasses
 
 from repro.core import xqparser as xq
-from repro.core.algebra import (Aggregate, Assign, Call, Const,
+from repro.core.algebra import (FUNCTIONS, Aggregate, Assign, Call, Const,
                                 DistributeResult, EmptyTupleSource, Expr,
                                 GroupBy, Limit, NestedTupleSource, Op,
                                 OrderBy, Select, Some, Subplan, Unnest,
                                 Var)
+from repro.core.errors import QueryError, TranslateError, UnsupportedError
 
 _CMP = {"eq": "value-eq", "ne": "value-ne", "lt": "value-lt",
         "le": "value-le", "gt": "value-gt", "ge": "value-ge"}
@@ -58,11 +59,23 @@ class Translator:
     def _atomize(self, e: Expr, is_node: bool) -> Expr:
         return Call("data", (e,)) if is_node else e
 
+    def _lookup(self, ast: xq.Ref, env: _Env) -> int:
+        v = env.vars.get(ast.name)
+        if v is None:
+            raise TranslateError(f"unbound variable ${ast.name}",
+                                 pos=ast.pos)
+        return v
+
+    def _check_fn(self, ast: xq.Fn) -> None:
+        if ast.name not in FUNCTIONS:
+            raise TranslateError(f"unknown function {ast.name}()",
+                                 pos=ast.pos)
+
     def _is_node_ast(self, ast: xq.Ast, env: _Env) -> bool:
         if isinstance(ast, xq.Path):
             return True
         if isinstance(ast, xq.Ref):
-            return env.node_valued.get(env.vars[ast.name], True)
+            return env.node_valued.get(self._lookup(ast, env), True)
         if isinstance(ast, xq.Fn):
             return ast.name in ("doc", "collection")
         return False
@@ -73,7 +86,7 @@ class Translator:
         if isinstance(ast, xq.Lit):
             return Const(ast.value, ast.typ)
         if isinstance(ast, xq.Ref):
-            return Var(env.vars[ast.name])
+            return Var(self._lookup(ast, env))
         if isinstance(ast, xq.Path):
             e = self.pure_expr(ast.base, env)
             for step in ast.steps:
@@ -92,9 +105,12 @@ class Translator:
                                 self._is_node_ast(ast.right, env))
             return Call(fn, (le, re_))
         if isinstance(ast, xq.Fn):
+            self._check_fn(ast)
             args = tuple(self.pure_expr(a, env) for a in ast.args)
             return Call(ast.name, args)
-        raise NotImplementedError(f"pure context: {ast}")
+        raise UnsupportedError(
+            f"unsupported expression in quantifier body: {ast}",
+            pos=getattr(ast, "pos", -1))
 
     # -- plan-building translation ---------------------------------------
 
@@ -122,7 +138,7 @@ class Translator:
         if isinstance(ast, xq.Lit):
             return plan, Const(ast.value, ast.typ), False
         if isinstance(ast, xq.Ref):
-            v = env.vars[ast.name]
+            v = self._lookup(ast, env)
             return plan, Var(v), env.node_valued.get(v, True)
         if isinstance(ast, xq.Path):
             plan, base, _ = self.expr(ast.base, env, plan)
@@ -135,9 +151,13 @@ class Translator:
                 plan, v = self.path_step(plan, v, step)
             return plan, Var(v), True
         if isinstance(ast, xq.Fn):
+            self._check_fn(ast)
             if ast.name in ("doc", "collection"):
-                lit = ast.args[0]
-                assert isinstance(lit, xq.Lit), "doc/collection need literal"
+                lit = ast.args[0] if ast.args else None
+                if not isinstance(lit, xq.Lit):
+                    raise TranslateError(
+                        f"{ast.name}() needs a string-literal argument",
+                        pos=ast.pos)
                 inner = Call("promote", (Call("data",
                                               (Const(lit.value, "string"),)),
                                          Const("string", "type")))
@@ -168,18 +188,26 @@ class Translator:
                              {**env.node_valued, qv: True})
             cond = self.pure_expr(ast.cond, inner_env)
             return plan, Some(qv, src, cond), False
+        if isinstance(ast, xq.Seq):
+            raise UnsupportedError(
+                "sequence construction is only supported in return "
+                "position", pos=ast.pos)
         if isinstance(ast, xq.Flwor):
             # FLWOR in expression position: collect its stream into a
             # sequence (create_sequence SUBPLAN), §4.2.2 shape.
             nested, ret_vars = self.flwor_stream(ast, env,
                                                  NestedTupleSource())
-            assert len(ret_vars) == 1, "expression FLWOR returns one item"
+            if len(ret_vars) != 1:
+                raise TranslateError(
+                    "a FLWOR in expression position must return a "
+                    "single item", pos=ast.pos)
             seq = self.new_var()
             nested = Aggregate(seq, Call("create_sequence",
                                          (Var(ret_vars[0]),)), nested)
             plan = Subplan(nested, plan)
             return plan, Var(seq), True
-        raise NotImplementedError(str(ast))
+        raise UnsupportedError(f"unsupported expression: {ast}",
+                               pos=getattr(ast, "pos", -1))
 
     def aggregate_call(self, ast: xq.Fn, env: _Env, plan: Op
                        ) -> tuple[Op, Expr, bool]:
@@ -222,11 +250,14 @@ class Translator:
                 plan, e, _ = self.expr(cl[1], env, plan)
                 plan = Select(Call("boolean", (e,)), plan)
             elif cl[0] in ("orderby", "limit"):
-                raise NotImplementedError(
+                raise UnsupportedError(
                     "order by / limit are supported after group by "
-                    "only (ordered grouped output)")
+                    "only (ordered grouped output)",
+                    pos=(cl[1].pos if isinstance(cl[1], xq.Ast)
+                         else ast.pos))
             else:
-                raise ValueError(cl)
+                raise TranslateError(
+                    f"unsupported FLWOR clause {cl[0]!r}", pos=ast.pos)
         # return clause
         items = (ast.ret.items if isinstance(ast.ret, xq.Seq)
                  else (ast.ret,))
@@ -288,36 +319,44 @@ class Translator:
                 fn = _CMP.get(a.op) or _ARITH[a.op]
                 return Call(fn, (post(a.left), post(a.right)))
             if isinstance(a, xq.Fn):
+                self._check_fn(a)
                 return Call(a.name, tuple(post(x) for x in a.args))
-            raise NotImplementedError(
+            raise UnsupportedError(
                 "post-group expressions must be built from the "
-                f"grouping key and aggregates, got {a}")
+                f"grouping key and aggregates, got {a}",
+                pos=getattr(a, "pos", -1))
 
         havings: list[Expr] = []
         order_keys: list[tuple[Expr, bool]] = []
         limit_k: int | None = None
         for rc in rest:
+            rc_pos = (rc[1].pos if len(rc) > 1 and isinstance(rc[1], xq.Ast)
+                      else ast.pos)
             if rc[0] == "where":
                 if order_keys or limit_k is not None:
-                    raise NotImplementedError(
-                        "HAVING where must precede order by / limit")
+                    raise UnsupportedError(
+                        "HAVING where must precede order by / limit",
+                        pos=rc_pos)
                 havings.append(post(rc[1]))
             elif rc[0] == "orderby":
                 order_keys.append((post(rc[1]), rc[2]))
             elif rc[0] == "limit":
                 if not order_keys:
-                    raise NotImplementedError(
+                    raise UnsupportedError(
                         "limit without order by has no deterministic "
-                        "row selection; add an order by clause")
+                        "row selection; add an order by clause",
+                        pos=rc_pos)
                 if limit_k is not None:
-                    raise NotImplementedError("duplicate limit clause")
+                    raise UnsupportedError("duplicate limit clause",
+                                           pos=rc_pos)
                 if rc[1] < 1:
-                    raise ValueError(f"limit must be >= 1, got {rc[1]}")
+                    raise TranslateError(
+                        f"limit must be >= 1, got {rc[1]}", pos=rc_pos)
                 limit_k = rc[1]
             else:
-                raise NotImplementedError(
+                raise UnsupportedError(
                     f"only where (HAVING) / order by / limit may "
-                    f"follow group by, got {rc[0]}")
+                    f"follow group by, got {rc[0]}", pos=rc_pos)
         items = (ast.ret.items if isinstance(ast.ret, xq.Seq)
                  else (ast.ret,))
         ret_vars: list[int] = []
@@ -369,4 +408,7 @@ class Translator:
 
 
 def translate(query: str) -> Op:
-    return Translator().translate(xq.parse(query))
+    try:
+        return Translator().translate(xq.parse(query))
+    except QueryError as e:
+        raise e.with_text(query)
