@@ -20,8 +20,9 @@ SUITES = {
     "groupby": ["serving_groupby"],
     "ordered": ["serving_ordered"],
     "multitenant": ["serving_multitenant"],
+    "obs": ["serving_obs"],
     "serving": ["serving", "serving_groupby", "serving_ordered",
-                "serving_multitenant"],
+                "serving_multitenant", "serving_obs"],
 }
 
 
@@ -83,6 +84,12 @@ def main() -> None:
                 smoke=args.quick,
                 out_path=("BENCH_serving_smoke.json" if args.quick
                           else "BENCH_serving.json")),
+        "serving_obs": lambda: serving_benchmarks.serving_obs(
+            variants=8 if args.quick else 64,
+            repeats=1 if args.quick else 3,
+            smoke=args.quick,
+            out_path=("BENCH_serving_smoke.json" if args.quick
+                      else "BENCH_serving.json")),
         "ingest": q_benchmarks.ingest,
         "lm_train": lm_benchmarks.train_step_smoke,
         "lm_attention": lm_benchmarks.attention_impls,

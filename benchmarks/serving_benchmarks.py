@@ -24,6 +24,17 @@ Four suites share one record (BENCH_serving.json):
                 batched dispatch), recorded under "multitenant":
                 p50/p99 latency, QPS, padding waste and compile counts
                 for pow2 vs cost-based bucketing
+  obs         — the observability overhead gate, recorded under
+                "obs": warm QPS with the default NULL tracer (the
+                pre-PR-equivalent path) vs a disabled Tracer must
+                agree within 2% (10% in smoke — the instrumentation
+                is off-switch-cheap by construction); warm QPS with
+                tracing ENABLED is recorded as the overhead number;
+                a 64-request (4 in smoke) multi-tenant scheduled
+                trace exports through ``Tracer.chrome_trace`` and
+                must validate against the Chrome/Perfetto
+                trace_event schema (full runs write the artifact to
+                BENCH_obs_trace.json)
 
 Three serving modes are measured per suite:
 
@@ -72,6 +83,23 @@ def _timed_pass(serve_fn, queries) -> tuple[float, list]:
     return time.perf_counter() - t0, out
 
 
+def _pct(sorted_vals, p: float) -> float:
+    """Nearest-rank percentile of an already-sorted sample: p99 of
+    <=100 samples is the 2nd-from-top order statistic boundary, not
+    the maximum."""
+    return sorted_vals[max(0, math.ceil(p * len(sorted_vals)) - 1)]
+
+
+def _per_request_warm(svc, queries) -> list:
+    """Sorted per-request warm latencies (seconds) of one pass."""
+    lats = []
+    for q in queries:
+        t0 = time.perf_counter()
+        svc.execute(q)
+        lats.append(time.perf_counter() - t0)
+    return sorted(lats)
+
+
 def _measure(db, wl, repeats: int, label: str, smoke: bool) -> dict:
     """Exact vs prepared vs batched over one workload; CSV rows under
     ``label``; gates (RuntimeError, so benchmarks/run.py's per-section
@@ -101,6 +129,7 @@ def _measure(db, wl, repeats: int, label: str, smoke: bool) -> dict:
                             queries)
         warm_times.append(dt)
     t_prep_warm = min(warm_times)
+    warm_lats = _per_request_warm(svc, queries)
 
     # -- batch admission: one dispatch per template per pass
     svc_b = QueryService(db)
@@ -127,6 +156,8 @@ def _measure(db, wl, repeats: int, label: str, smoke: bool) -> dict:
         "compile_amortized_speedup": t_exact / t_prep_cold,
         "warm_s_prepared": t_prep_warm,
         "warm_qps_prepared": n / t_prep_warm,
+        "warm_p50_ms_prepared": _pct(warm_lats, 0.50) * 1e3,
+        "warm_p99_ms_prepared": _pct(warm_lats, 0.99) * 1e3,
         "cold_s_batched": t_batch_cold,
         "warm_s_batched": t_batch_warm,
         "warm_qps_batched": n / t_batch_warm,
@@ -160,7 +191,7 @@ def _measure(db, wl, repeats: int, label: str, smoke: bool) -> dict:
     return results
 
 
-SECTIONS = ("groupby", "ordered", "multitenant")
+SECTIONS = ("groupby", "ordered", "multitenant", "obs")
 
 
 def _merge_record(out_path: str, section, results: dict) -> None:
@@ -239,16 +270,17 @@ def serving_ordered(variants: int = 64, repeats: int = 3,
             dt, _ = _timed_pass(
                 lambda qs: [svc.execute(q) for q in qs], queries)
             warm.append(dt)
+        lats = _per_request_warm(svc, queries)
         # materialized group rows: the ordered output tile's padded
         # segment width (per partition), summed over the workload —
         # what the host pays to fetch/compact per request
         mat = sum(r.raw["valid"].shape[-1] for r in rs)
-        return t_cold, min(warm), rs, mat
+        return t_cold, min(warm), rs, mat, lats
 
     svc_push = QueryService(db)
-    cold_p, warm_p, rs_push, mat_push = measure(svc_push)
+    cold_p, warm_p, rs_push, mat_push, lats_p = measure(svc_push)
     svc_full = QueryService(db, pushdown_topk=False)
-    cold_f, warm_f, rs_full, mat_full = measure(svc_full)
+    cold_f, warm_f, rs_full, mat_full, lats_f = measure(svc_full)
 
     mismatches = [i for i, (a, b) in enumerate(zip(rs_push, rs_full))
                   if a.rows() != b.rows()]    # order-sensitive
@@ -276,6 +308,10 @@ def serving_ordered(variants: int = 64, repeats: int = 3,
         "warm_s_fullsort": warm_f,
         "warm_qps_pushdown": n / warm_p,
         "warm_qps_fullsort": n / warm_f,
+        "warm_p50_ms_pushdown": _pct(lats_p, 0.50) * 1e3,
+        "warm_p99_ms_pushdown": _pct(lats_p, 0.99) * 1e3,
+        "warm_p50_ms_fullsort": _pct(lats_f, 0.50) * 1e3,
+        "warm_p99_ms_fullsort": _pct(lats_f, 0.99) * 1e3,
         "warm_speedup": warm_f / warm_p,
         "result_mismatches": len(mismatches),
     }
@@ -334,15 +370,9 @@ def _traffic_pass(svc, traffic, policy, *, window: float,
 
 def _pass_metrics(rt, tickets, wall, svc) -> dict:
     lats = sorted(t.latency for t in tickets)
-
-    def pct(p):
-        # nearest-rank: p99 of <=100 samples is the 2nd-from-top
-        # order statistic boundary, not the maximum
-        return lats[max(0, math.ceil(p * len(lats)) - 1)]
-
     return {
-        "p50_latency_vs": pct(0.50),
-        "p99_latency_vs": pct(0.99),
+        "p50_latency_vs": _pct(lats, 0.50),
+        "p99_latency_vs": _pct(lats, 0.99),
         "qps": len(tickets) / wall,
         "batches": rt.stats.batches,
         "scalar_dispatches": rt.stats.scalar_dispatches,
@@ -448,9 +478,115 @@ def serving_multitenant(variants: int = 64, repeats: int = 3,
     return results
 
 
+def serving_obs(variants: int = 64, repeats: int = 3,
+                out_path: str = "BENCH_serving.json",
+                smoke: bool = False) -> dict:
+    """The observability suite: the zero-cost-when-off gate plus the
+    Perfetto export check.
+
+    Warm QPS is measured same-process on identical traffic for three
+    services: the default NULL tracer (bitwise the pre-PR warm path —
+    the baseline), a constructed-but-disabled ``Tracer(enabled=False)``
+    (what a user who wires tracing but leaves it off pays), and an
+    enabled tracer (the recorded overhead). The disabled path must stay
+    within 2% of the baseline (10% in smoke, where the workload is too
+    small to time stably); the gate raises BEFORE the json write. A
+    scheduled multi-tenant trace (64 requests; 4 in smoke) is exported
+    via ``chrome_trace`` on both clocks and validated against the
+    trace_event schema; full runs write BENCH_obs_trace.json."""
+    from repro.core.obs.trace import Tracer, validate_trace_events
+
+    spec = SMOKE_SPEC if smoke else FULL_SPEC
+    db = build_database(spec, num_partitions=4)
+    stations = [spec.station_id(i) for i in range(spec.num_stations)]
+    wl = make_workload(stations, spec.years, total=variants)
+    queries = [q for _, q in wl]
+    label = "serving_obs"
+
+    svcs = {
+        "null": QueryService(db),
+        "off": QueryService(db, tracer=Tracer(enabled=False)),
+        "on": QueryService(db, tracer=Tracer()),
+    }
+    for svc in svcs.values():            # cold pass: compile
+        for q in queries:
+            svc.execute(q)
+    # interleaved warm passes: min-of-repeats per service, adjacent in
+    # time so machine drift hits all three variants alike
+    best = {k: math.inf for k in svcs}
+    for _ in range(max(repeats, 2)):
+        for k, svc in svcs.items():
+            dt, _ = _timed_pass(
+                lambda qs, s=svc: [s.execute(q) for q in qs], queries)
+            best[k] = min(best[k], dt)
+    n = len(queries)
+    qps = {k: n / v for k, v in best.items()}
+    off_vs_null = qps["off"] / qps["null"]
+    on_vs_null = qps["on"] / qps["null"]
+
+    # -- scheduled multi-tenant trace through an enabled tracer
+    tr = Tracer()
+    svc_t = QueryService(db, tracer=tr)
+    n_req = 4 if smoke else 64
+    traffic = make_tenant_traffic(DEFAULT_TENANTS, stations, spec.years,
+                                  total=n_req, seed=11)
+    rt = svc_t.runtime(window=2.0, max_fill=32, quantum=8)
+    for at, tenant, _, text in traffic:
+        rt.submit(text, tenant=tenant, at=at)
+    tickets = rt.drain()
+    for t in tickets:
+        if t.error is not None:
+            raise RuntimeError(f"scheduled request failed: {t.error}")
+    ev_virtual = tr.chrome_trace(clock="virtual")
+    ev_wall = tr.chrome_trace(clock="wall")
+    problems = (validate_trace_events(ev_virtual)
+                + validate_trace_events(ev_wall))
+    if problems:
+        raise RuntimeError(
+            f"trace_event export failed schema validation: "
+            f"{problems[:5]}")
+
+    results = {
+        "variants": n,
+        "smoke": smoke,
+        "warm_qps_tracer_null": qps["null"],
+        "warm_qps_tracer_off": qps["off"],
+        "warm_qps_tracer_on": qps["on"],
+        "off_vs_null_qps_ratio": off_vs_null,
+        "on_vs_null_qps_ratio": on_vs_null,
+        "trace_requests": n_req,
+        "trace_events_virtual": len(ev_virtual),
+        "trace_events_wall": len(ev_wall),
+        "trace_spans": sum(1 for e in ev_virtual
+                           if e.get("ph") == "X"),
+        "trace_schema_problems": 0,
+    }
+    for k, v in results.items():
+        if isinstance(v, (int, float)):
+            row(label, f"{n}var", k, float(v))
+
+    # gate BEFORE the json write: a disabled tracer must be free (2%
+    # is timing noise at full scale; smoke workloads are too small to
+    # hold that tight, hence 10%)
+    tol = 0.10 if smoke else 0.02
+    if off_vs_null < 1.0 - tol:
+        raise RuntimeError(
+            f"tracing-off warm QPS is {1 - off_vs_null:.1%} below the "
+            f"NULL-tracer baseline (allowed {tol:.0%}) — the "
+            f"instrumentation leaked onto the warm path")
+    if not smoke:
+        with open("BENCH_obs_trace.json", "w") as f:
+            json.dump(ev_virtual, f, indent=1)
+            f.write("\n")
+        print("# wrote BENCH_obs_trace.json")
+    _merge_record(out_path, "obs", results)
+    return results
+
+
 SUITES = {"scan_join": serving, "groupby": serving_groupby,
           "ordered": serving_ordered,
-          "multitenant": serving_multitenant}
+          "multitenant": serving_multitenant,
+          "obs": serving_obs}
 
 
 def main() -> None:

@@ -24,6 +24,11 @@
 #                                 ladder monotonicity) as their own
 #                                 stage — the fast slices; full grids
 #                                 are slow-marked (FULL=1)
+#   scripts/ci.sh --obs           also run the observability smoke
+#                                 stage standalone (tracer/metrics/
+#                                 profile unit+property tests plus the
+#                                 zero-cost-when-off benchmark gate
+#                                 and trace_event export validation)
 #   scripts/ci.sh --lint          run ONLY the static stage: the
 #                                 tracing-hazard/determinism linter
 #                                 (file:line findings, nonzero exit)
@@ -40,11 +45,14 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 DIFFERENTIAL=0
 SCHEDULER=0
 PROPERTIES=0
+OBS=0
 while [ "${1:-}" = "--differential" ] || [ "${1:-}" = "--scheduler" ] \
-        || [ "${1:-}" = "--properties" ] || [ "${1:-}" = "--lint" ]; do
+        || [ "${1:-}" = "--properties" ] || [ "${1:-}" = "--obs" ] \
+        || [ "${1:-}" = "--lint" ]; do
     if [ "$1" = "--differential" ]; then DIFFERENTIAL=1; fi
     if [ "$1" = "--scheduler" ]; then SCHEDULER=1; fi
     if [ "$1" = "--properties" ]; then PROPERTIES=1; fi
+    if [ "$1" = "--obs" ]; then OBS=1; fi
     if [ "$1" = "--lint" ]; then
         python -m repro.core.analysis.lint src/repro
         python -m repro.core.analysis.verify
@@ -72,4 +80,8 @@ fi
 if [ "$PROPERTIES" = "1" ]; then
     python -m pytest -x -q -m "properties and not slow" \
         tests/test_properties.py
+fi
+if [ "$OBS" = "1" ]; then
+    python -m pytest -x -q tests/test_obs.py
+    python -m benchmarks.serving_benchmarks --smoke --suite obs
 fi

@@ -34,6 +34,14 @@ CAP004    a registry cap never presized (no ``dataclasses.replace(...,
           start at the fallback ceiling.  ``join_bucket`` is exempt
           (regrowth-only by design: bucket width is a trace-unroll
           factor, not a statistics question).
+OBS001    a ``<obj>.stats.<field>`` increment site under ``core/``
+          whose field has no entry in ``obs.metrics.
+          REGISTERED_STATS`` — a counter the metrics exposition
+          silently drops.  Covers ``+=`` and dict-entry writes
+          (``stats.d[k] = stats.d.get(k, 0) + 1``).
+OBS002    a ``REGISTERED_STATS`` key naming no field of
+          ``ServiceStats``/``RuntimeStats`` — a stale registration
+          that would export nothing.
 
 The TRACE rules only apply inside **traced scopes** — the top-level
 functions/classes that execute under ``jax.jit``/``shard_map``
@@ -389,6 +397,128 @@ def lint_registry(repo_src: str) -> list[Finding]:
     return findings
 
 
+# -- metrics-registry completeness (cross-file, AST-only) --------------------
+
+
+def _registered_stats_keys(tree: ast.Module) -> Optional[set]:
+    """Keys of the literal REGISTERED_STATS dict (None when the
+    assignment is missing — distinct from legitimately empty)."""
+    for node in ast.walk(tree):
+        targets = (node.targets if isinstance(node, ast.Assign)
+                   else [node.target]
+                   if isinstance(node, ast.AnnAssign) else [])
+        if (any(isinstance(t, ast.Name) and t.id == "REGISTERED_STATS"
+                for t in targets)
+                and isinstance(node.value, ast.Dict)):
+            return {k.value for k in node.value.keys
+                    if isinstance(k, ast.Constant)}
+    return None
+
+
+def _class_field_names(tree: ast.Module, cls: str) -> set:
+    """Annotated field names of a dataclass body."""
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef) and node.name == cls:
+            return {s.target.id for s in node.body
+                    if isinstance(s, ast.AnnAssign)
+                    and isinstance(s.target, ast.Name)}
+    return set()
+
+
+def _stats_increment_sites(tree: ast.Module) -> list:
+    """(node, field) for every write that bumps a stats counter:
+    ``<obj>.stats.<field> += n`` and ``<obj>.stats.<field>[k] = ...``
+    (the dict-entry form of an increment)."""
+    out = []
+
+    def field_of(target: ast.AST) -> Optional[str]:
+        if isinstance(target, ast.Subscript):
+            target = target.value
+        chain = _attr_chain(target)
+        if len(chain) >= 3 and chain[-2] == "stats":
+            return chain[-1]
+        return None
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.AugAssign):
+            f = field_of(node.target)
+            if f is not None:
+                out.append((node, f))
+        elif isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Subscript):
+                    f = field_of(t)
+                    if f is not None:
+                        out.append((node, f))
+    return out
+
+
+def lint_stats_sources(files: Iterable[tuple],
+                       registered: set) -> list[Finding]:
+    """OBS001 over (path, source) pairs: every stats increment site
+    must name a REGISTERED_STATS key. Waivers honored."""
+    findings: list[Finding] = []
+    for path, text in files:
+        try:
+            tree = ast.parse(text)
+        except SyntaxError:
+            continue
+        lines = text.splitlines()
+        for node, field in _stats_increment_sites(tree):
+            if field in registered:
+                continue
+            f = Finding(
+                "OBS001", path, node.lineno, node.col_offset,
+                f"stats field {field!r} is incremented here but has "
+                f"no obs.metrics.REGISTERED_STATS entry — it would "
+                f"be invisible to the metrics exposition")
+            if not _waived(lines, f):
+                findings.append(f)
+    return findings
+
+
+def lint_metrics(repo_src: str) -> list[Finding]:
+    """Cross-file metrics-registry completeness over a source tree
+    rooted at ``repo_src``: OBS001 (unregistered increment sites under
+    core/) and OBS002 (stale registrations)."""
+    metrics_path = os.path.join(repo_src, "repro", "core", "obs",
+                                "metrics.py")
+    metrics_tree = _parse_file(metrics_path)
+    if metrics_tree is None:
+        return [Finding("OBS001", repo_src, 0, 0,
+                        "cannot locate repro/core/obs/metrics.py "
+                        "under this root")]
+    registered = _registered_stats_keys(metrics_tree)
+    if registered is None:
+        return [Finding("OBS001", metrics_path, 0, 0,
+                        "no literal REGISTERED_STATS dict in "
+                        "obs/metrics.py")]
+
+    core = os.path.join(repo_src, "repro", "core")
+    files = []
+    for path in _py_files([core]):
+        with open(path, encoding="utf-8") as fh:
+            files.append((path, fh.read()))
+    findings = lint_stats_sources(files, registered)
+
+    svc_tree = _parse_file(os.path.join(repo_src, "repro", "core",
+                                        "service.py"))
+    rt_tree = _parse_file(os.path.join(repo_src, "repro", "core",
+                                       "serving", "scheduler.py"))
+    fields: set = set()
+    if svc_tree is not None:
+        fields |= _class_field_names(svc_tree, "ServiceStats")
+    if rt_tree is not None:
+        fields |= _class_field_names(rt_tree, "RuntimeStats")
+    if fields:
+        for key in sorted(registered - fields):
+            findings.append(Finding(
+                "OBS002", metrics_path, 0, 0,
+                f"REGISTERED_STATS key {key!r} names no field of "
+                f"ServiceStats/RuntimeStats — stale registration"))
+    return findings
+
+
 # -- CLI ---------------------------------------------------------------------
 
 
@@ -406,6 +536,7 @@ def main(argv: Optional[list] = None) -> int:
             root = os.path.dirname(root.rstrip("/" + os.sep))
         if os.path.isdir(os.path.join(root, "repro", "core")):
             findings.extend(lint_registry(root))
+            findings.extend(lint_metrics(root))
             break
     for f in findings:
         print(f)

@@ -98,6 +98,14 @@ class EvalCtx:
     cfg: ExecConfig
     ovf: dict[str, list] = dataclasses.field(
         default_factory=lambda: {f: [] for f in OVERFLOW_FLAGS.values()})
+    # profile mode (Executor.compile(profile=True)): per-op traced
+    # valid-row counts keyed by the plan's pre-order index, plus the
+    # host-side meta dict the trace fills in (obs/profile.py joins it
+    # with the static plan). None on normal compiles — the warm path
+    # never pays for profiling.
+    prof: Optional[dict] = None          # pre-order index -> traced count
+    op_index: Optional[dict] = None      # id(op) -> pre-order index
+    prof_meta: Optional[dict] = None     # filled at trace time
 
     def note(self, flag: str, value) -> None:
         """Record one stage's overflow predicate under its registry
@@ -269,7 +277,8 @@ class Executor:
                 axis: str = "data", donate: bool = False,
                 config: Optional[ExecConfig] = None,
                 param_specs: tuple = (),
-                batch: Optional[int] = None) -> "CompiledPlan":
+                batch: Optional[int] = None,
+                profile: bool = False) -> "CompiledPlan":
         """Returns a CompiledPlan whose fn maps tables -> raw arrays
         (stacked over partitions); static column schema is captured at
         trace time (strings can't flow through vmap/shard_map).
@@ -287,10 +296,21 @@ class Executor:
         traced scalars (one per spec) — a binding change is a new
         argument, never a recompilation. ``batch=B`` additionally maps
         the fn over a leading [B] axis of every param (one device
-        dispatch serving B concurrent bindings of the same plan)."""
+        dispatch serving B concurrent bindings of the same plan).
+
+        ``profile=True`` additionally outputs a per-operator global
+        valid-row count (``prof_rows``, one slot per pre-order plan
+        op that executes unfused) — the runtime half of
+        ``QueryService.explain(profile=True)``. The extra reduction
+        changes the compiled artifact, so profile variants cache
+        separately from serving variants and the warm path never
+        carries the cost."""
         cfg = config or self.config
         self.compile_count += 1
         schema: dict[int, tuple] = {}
+        prof_meta: Optional[dict] = {} if profile else None
+        op_index = ({id(op): i for i, op in enumerate(A.walk(plan))}
+                    if profile else None)
         jit = partial(jax.jit, donate_argnums=(0,)) if donate else jax.jit
         if batch is not None and not param_specs:
             raise ValueError("batched compilation needs parameters")
@@ -299,7 +319,11 @@ class Executor:
             self.trace_count += 1
             ev = ExprEval(self.db, tables, params=params)
             comm = Comm(axis)
-            ctx = EvalCtx(cfg)
+            if profile:
+                ctx = EvalCtx(cfg, prof={}, op_index=op_index,
+                              prof_meta=prof_meta)
+            else:
+                ctx = EvalCtx(cfg)
             tile = self._eval(plan, ev, comm, None, ctx)
             return self._outputs(plan, tile, ev, schema, ctx)
 
@@ -318,7 +342,7 @@ class Executor:
                               axis_name=axis)
             return CompiledPlan(jit(fn), schema, plan, cfg, mode,
                                 donated=donate, param_specs=param_specs,
-                                batch=batch)
+                                batch=batch, profile_meta=prof_meta)
         if mode == "spmd":
             from jax.sharding import PartitionSpec as P
             from jax.experimental.shard_map import shard_map
@@ -360,7 +384,7 @@ class Executor:
                            out_specs=out_spec, check_rep=False)
             return CompiledPlan(jit(sm), schema, plan, cfg, mode,
                                 donated=donate, param_specs=param_specs,
-                                batch=batch)
+                                batch=batch, profile_meta=prof_meta)
         raise ValueError(mode)
 
     def run(self, plan: A.Op, mode: str = "sim", mesh=None,
@@ -392,7 +416,8 @@ class Executor:
             cp.spent = True
             self._tables_donated = True
         raw = jax.device_get(out)
-        return ResultSet(self.db, cp.plan, raw, cp.schema)
+        return ResultSet(self.db, cp.plan, raw, cp.schema,
+                         profile_meta=cp.profile_meta)
 
     def run_compiled_batch(self, cp: "CompiledPlan", stacked: tuple,
                            count: int) -> list["ResultSet"]:
@@ -414,7 +439,7 @@ class Executor:
 
         return [ResultSet(self.db, cp.plan,
                           {k: take(v, b) for k, v in raw.items()},
-                          cp.schema)
+                          cp.schema, profile_meta=cp.profile_meta)
                 for b in range(count)]
 
     def _check_runnable(self, cp: "CompiledPlan") -> None:
@@ -436,6 +461,19 @@ class Executor:
 
     def _eval(self, op: A.Op, ev: ExprEval, comm: Comm,
               nts_input: Optional[Tile], ctx: EvalCtx) -> Tile:
+        tile = self._eval_op(op, ev, comm, nts_input, ctx)
+        if ctx.prof is not None:
+            # profile mode: record each op's global valid-row count.
+            # Ops that execute fused into a parent (OrderBy under
+            # Limit, Aggregate under Subplan) never pass through here
+            # and stay absent — obs/profile marks them fused.
+            idx = ctx.op_index.get(id(op))
+            if idx is not None:
+                ctx.prof[idx] = jnp.sum(tile.valid.astype(I32))
+        return tile
+
+    def _eval_op(self, op: A.Op, ev: ExprEval, comm: Comm,
+                 nts_input: Optional[Tile], ctx: EvalCtx) -> Tile:
         if isinstance(op, A.EmptyTupleSource):
             return self._trivial_tile()
         if isinstance(op, A.NestedTupleSource):
@@ -860,6 +898,13 @@ class Executor:
                                "overflow": tile.overflow}
         for flag in OVERFLOW_FLAGS.values():
             out[flag] = or_all(ctx.ovf[flag])
+        if ctx.prof is not None:
+            # per-op profile counts in pre-order; the static order
+            # list reaches the host through the meta dict captured at
+            # trace time (same trick as ``schema``)
+            order = sorted(ctx.prof)
+            out["prof_rows"] = jnp.stack([ctx.prof[i] for i in order])
+            ctx.prof_meta["order"] = order
         for v in plan.vars:
             c = tile.cols[v]
             if c.kind == "node":
@@ -893,6 +938,8 @@ class CompiledPlan:
     spent: bool = dataclasses.field(default=False, repr=False)
     param_specs: tuple = ()               # prepared-query parameter types
     batch: Optional[int] = None           # B of a batched dispatch fn
+    profile_meta: Optional[dict] = None   # profile=True: op order,
+    #                                       filled at trace time
 
 
 class ResultSet:
@@ -901,15 +948,45 @@ class ResultSet:
     differential tests can compare against the tree-walking baseline."""
 
     def __init__(self, db: xdm.Database, plan: A.Op, raw: dict,
-                 schema: dict[int, tuple]):
+                 schema: dict[int, tuple], profile_meta: dict = None):
         self.db = db
         self.plan = plan
         self.raw = raw
         self.schema = schema
+        self.profile_meta = profile_meta
         self.overflow = bool(np.any(raw["overflow"]))
         # per-stage flags (absent in pre-refactor raw dicts)
         for flag in OVERFLOW_FLAGS.values():    # overflow_scan, ...
             setattr(self, flag, bool(np.any(raw.get(flag, False))))
+
+    def op_rows(self) -> Optional[dict]:
+        """Profile-mode runs only: pre-order plan-op index -> global
+        valid rows out of that operator (partition axis summed — per
+        the execution model a tile is either partitioned, where the
+        sum IS the global count, or valid on the central partition
+        only). None on normal runs."""
+        if self.profile_meta is None or "prof_rows" not in self.raw:
+            return None
+        order = self.profile_meta.get("order")
+        if order is None:
+            return None
+        pr = np.asarray(self.raw["prof_rows"])
+        per_op = pr.reshape(-1, pr.shape[-1]).sum(axis=0)
+        return {idx: int(per_op[j]) for j, idx in enumerate(order)}
+
+    def op_rows_peak(self) -> Optional[dict]:
+        """Profile-mode runs only: pre-order plan-op index -> valid
+        rows out of that operator on the BUSIEST partition. Capacity
+        utilization compares against this (caps are per-partition
+        tile sizes); for central-only tiles peak == global count."""
+        if self.profile_meta is None or "prof_rows" not in self.raw:
+            return None
+        order = self.profile_meta.get("order")
+        if order is None:
+            return None
+        pr = np.asarray(self.raw["prof_rows"])
+        per_op = pr.reshape(-1, pr.shape[-1]).max(axis=0)
+        return {idx: int(per_op[j]) for j, idx in enumerate(order)}
 
     def rows(self) -> list[tuple]:
         assert isinstance(self.plan, A.DistributeResult)

@@ -1,0 +1,22 @@
+"""Observability layer: span tracer (dual wall/virtual clocks, Chrome
+trace export), metrics registry (Prometheus text + JSONL sink), and
+per-query operator profiles. Host-only — nothing here runs inside
+jitted code, and the NULL_TRACER default keeps the warm path at its
+pre-instrumentation cost. No jax at import time."""
+from repro.core.obs.metrics import (Counter, EventSink, Gauge,
+                                    Histogram, MetricsRegistry,
+                                    REGISTERED_STATS, stats_diff,
+                                    stats_snapshot)
+from repro.core.obs.profile import (OpProfile, QueryProfile,
+                                    build_profile)
+from repro.core.obs.trace import (NULL_TRACER, Span, Tracer, current,
+                                  sig_digest, using,
+                                  validate_trace_events)
+
+__all__ = [
+    "Counter", "EventSink", "Gauge", "Histogram", "MetricsRegistry",
+    "REGISTERED_STATS", "stats_diff", "stats_snapshot",
+    "OpProfile", "QueryProfile", "build_profile",
+    "NULL_TRACER", "Span", "Tracer", "current", "sig_digest",
+    "using", "validate_trace_events",
+]

@@ -46,6 +46,7 @@ import numpy as np
 
 from repro.core import algebra as A
 from repro.core import xdm
+from repro.core.obs import trace as obs_trace
 
 # Literals appearing directly under these calls are runtime values, not
 # plan structure: comparisons and arithmetic.
@@ -179,18 +180,21 @@ def prepare_plan(plan: A.Op, text: Optional[str] = None) -> PreparedQuery:
     ``Param``'s declared type is verified against its use sites via
     schema inference — an externally built erased plan cannot smuggle
     a sid parameter into an f32 comparison."""
-    existing = collect_params(plan)
-    if existing:
-        pq = PreparedQuery(plan, existing, None, repr(plan), text)
-    else:
-        erased, specs, defaults = lift_params(plan)
-        pq = PreparedQuery(erased, specs, defaults, repr(erased), text)
-    from repro.core.analysis.schema import check_param_uses
-    from repro.core.errors import QueryError
-    try:
-        check_param_uses(pq.plan)
-    except QueryError as e:
-        raise e.with_text(text)
+    with obs_trace.current().span("lift", cat="prepare") as span:
+        existing = collect_params(plan)
+        if existing:
+            pq = PreparedQuery(plan, existing, None, repr(plan), text)
+        else:
+            erased, specs, defaults = lift_params(plan)
+            pq = PreparedQuery(erased, specs, defaults, repr(erased),
+                               text)
+        span.set(params=len(pq.specs))
+        from repro.core.analysis.schema import check_param_uses
+        from repro.core.errors import QueryError
+        try:
+            check_param_uses(pq.plan)
+        except QueryError as e:
+            raise e.with_text(text)
     return pq
 
 

@@ -19,6 +19,7 @@ from repro.core.algebra import (Aggregate, Assign, Call, Const, DataScan,
                                 Expr, Op, Some, Subplan, Unnest, Var,
                                 fn_info, free_vars, transform_bottom_up,
                                 var_use_counts, walk)
+from repro.core.obs import trace as obs_trace
 
 Rule = Callable[[Op, "Context"], Optional[Op]]
 
@@ -229,6 +230,12 @@ def run_rules(root: Op, rules: list[Rule], max_iters: int = 200) -> Op:
             root, fired = apply_rule_once(root, rule)
             if fired:
                 root = remove_identity_assigns(root)
+                # one instant per rule firing through the ambient
+                # tracer (a no-op unless the service installed one
+                # around prepare — obs/trace.using)
+                obs_trace.current().event(
+                    "rewrite-rule", cat="rewrite",
+                    rule=getattr(rule, "__name__", str(rule)))
                 if _CHECK_REWRITES:
                     from repro.core.analysis.check import check_rewrite
                     check_rewrite(prev, root,
@@ -250,7 +257,9 @@ def optimize(root: Op, trace: Optional[list] = None) -> Op:
         ("cleanup", path_rules.CLEANUP_RULES),
     ]
     for name, rules in stages:
-        root = run_rules(root, rules)
+        with obs_trace.current().span(f"rewrite.{name}",
+                                      cat="rewrite"):
+            root = run_rules(root, rules)
         if trace is not None:
             trace.append((name, root))
     return root

@@ -91,24 +91,29 @@ restricted to count/sum/min/max with no HAVING / post-group wrappers,
 so per-window partial groups merge associatively in serving/window.py,
 "verified" = the static plan verifier (core/analysis/) proves the plan
 well-typed at prepare time — executor-mode schema inference, capacity-
-flow analysis, overflow-registry agreement — before anything traces):
+flow analysis, overflow-registry agreement — before anything traces,
+"obs" = ``explain(query, profile=True)`` produces the operator-
+annotated runtime profile (per-op rows, cap utilization, compile/
+execute split — core/obs/profile.py) on the prepared, batched AND
+scheduled paths, and the query's serving stages emit tracer spans /
+registry metrics when a ``Tracer`` is attached):
 
-  =====  ==========================  ====  =====  =====  =====  =====  =====
-  query  shape                       prep  batch  sched  order  windw  verif
-  =====  ==========================  ====  =====  =====  =====  =====  =====
-  Q1     scan + 4-predicate filter   yes   yes    yes    —      —      yes
-  Q2     scan + value filter         yes   yes    yes    —      —      yes
-  Q3     scalar agg (sum div)        yes   yes    yes    —      —      yes
-  Q4     scalar agg (max div)        yes   yes    yes    —      —      yes
-  Q5     hash join + quantifier      yes   yes    yes    —      —      yes
-  Q6     hash join, 3-col rows       yes   yes    yes    —      —      yes
-  Q7     join + scalar agg           yes   yes    yes    —      —      yes
-  Q8     self-join + scalar agg      yes   yes    yes    —      —      yes
-  Q9     keyed group-by aggs         yes   yes    yes    yes    —      yes
-  Q10    group-by + HAVING filter    yes   yes    yes    yes    —      yes
-  Q11    group-by + order-by + k     yes   yes    yes    yes    —      yes
-  Q12    windowed grouped slice      yes   yes    yes    yes    yes    yes
-  =====  ==========================  ====  =====  =====  =====  =====  =====
+  =====  ==========================  ====  =====  =====  =====  =====  =====  ===
+  query  shape                       prep  batch  sched  order  windw  verif  obs
+  =====  ==========================  ====  =====  =====  =====  =====  =====  ===
+  Q1     scan + 4-predicate filter   yes   yes    yes    —      —      yes    yes
+  Q2     scan + value filter         yes   yes    yes    —      —      yes    yes
+  Q3     scalar agg (sum div)        yes   yes    yes    —      —      yes    yes
+  Q4     scalar agg (max div)        yes   yes    yes    —      —      yes    yes
+  Q5     hash join + quantifier      yes   yes    yes    —      —      yes    yes
+  Q6     hash join, 3-col rows       yes   yes    yes    —      —      yes    yes
+  Q7     join + scalar agg           yes   yes    yes    —      —      yes    yes
+  Q8     self-join + scalar agg      yes   yes    yes    —      —      yes    yes
+  Q9     keyed group-by aggs         yes   yes    yes    yes    —      yes    yes
+  Q10    group-by + HAVING filter    yes   yes    yes    yes    —      yes    yes
+  Q11    group-by + order-by + k     yes   yes    yes    yes    —      yes    yes
+  Q12    windowed grouped slice      yes   yes    yes    yes    yes    yes    yes
+  =====  ==========================  ====  =====  =====  =====  =====  =====  ===
 
 (Q9/Q10 are "ordered: yes" in the sense that adding ``order by`` /
 ``limit`` clauses to their templates lowers and serves; Q9's ``avg``
@@ -116,7 +121,9 @@ and Q10's HAVING make them non-mergeable for windowed streaming.)
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import time
 import types
 from collections import OrderedDict
 from typing import Optional, Sequence, Union
@@ -125,6 +132,10 @@ from repro.core import algebra as A
 from repro.core import xdm
 from repro.core.executor import (CompiledPlan, ExecConfig, Executor,
                                  ResultSet)
+from repro.core.obs import trace as obs_trace
+from repro.core.obs.metrics import (MetricsRegistry, stats_diff,
+                                    stats_snapshot)
+from repro.core.obs.trace import NULL_TRACER, sig_digest
 from repro.core.physical import (estimate_group_cap, estimate_scan_cap,
                                  estimate_topk_cap, round_cap)
 from repro.core.prepared import (PreparedQuery, bind_params, prepare_plan,
@@ -157,11 +168,24 @@ class ServiceStats:
     exact_misses: int = 0   # new binding (shared plan may still hit)
     batches: int = 0        # batched device dispatches
     batched_requests: int = 0   # requests served by those dispatches
+    # regrowth events per ExecConfig cap (scan_cap/join_bucket/...),
+    # keyed by the OVERFLOW_FLAGS registry's knob names — the
+    # "overflow-by-cap" metric (obs/metrics.REGISTERED_STATS)
+    overflows_by_cap: dict = dataclasses.field(default_factory=dict)
 
     @property
     def hit_rate(self) -> float:
         total = self.cache_hits + self.cache_misses
         return self.cache_hits / total if total else 0.0
+
+    def snapshot(self) -> "ServiceStats":
+        """Point-in-time copy; pair with ``diff`` so tests and
+        benchmarks stop hand-subtracting counter fields."""
+        return stats_snapshot(self)
+
+    def diff(self, since: "ServiceStats") -> "ServiceStats":
+        """Per-field delta vs an earlier ``snapshot()``."""
+        return stats_diff(self, since)
 
 
 class QueryService:
@@ -181,7 +205,8 @@ class QueryService:
                  growth: int = 4, presize: bool = True,
                  cache_capacity: int = 64, parameterize: bool = True,
                  binding_stats_capacity: int = 4096,
-                 pushdown_topk: bool = True, verify: bool = True):
+                 pushdown_topk: bool = True, verify: bool = True,
+                 tracer=None):
         assert growth > 1, "capacity growth must be geometric"
         assert cache_capacity >= 1
         assert binding_stats_capacity >= 1
@@ -206,6 +231,21 @@ class QueryService:
         self.verify = verify
         self.executor = Executor(db, self.base_config)
         self.stats = ServiceStats()
+        # observability: spans go to the attached tracer (default: the
+        # shared no-op NULL_TRACER — the pre-instrumentation warm
+        # path); counters stay plain dataclass fields and the metrics
+        # registry binds them for live Prometheus/JSON exposition
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.metrics = MetricsRegistry()
+        self.metrics.register_stats("service", self.stats)
+        # per-signature observability history feeding explain():
+        # compile count/wall seconds and regrowth (cap, old, new)
+        # events. Only cold paths (compile, regrow) write here.
+        self._sig_history: OrderedDict[str, dict] = OrderedDict()
+        # explain(profile=True) arms this around its run: compiled()
+        # keys + compiles profile variants (executor profile=True)
+        # separately from serving variants
+        self._profile_mode = False
         # level-1 cache: erased signature -> compiled plan, LRU-bounded
         self._cache: OrderedDict[tuple, CompiledPlan] = OrderedDict()
         # level-2, stats only: exact (signature, binding) -> hit count,
@@ -275,7 +315,15 @@ class QueryService:
         if isinstance(query, str):
             pq = self._prepared_memo.get(query)
             if pq is None:
-                pq = self._prepare_plan(optimize(translate(query)), query)
+                # ambient tracer installed around the cold prepare
+                # pipeline so rewrite-rule firings (rewrite/engine)
+                # and the literal lift (prepared) emit through it
+                with obs_trace.using(self.tracer), \
+                        self.tracer.span("prepare", cat="prepare") as sp:
+                    pq = self._prepare_plan(optimize(translate(query)),
+                                            query)
+                    sp.set(sig=sig_digest(pq.signature),
+                           params=len(pq.specs))
                 if len(self._prepared_memo) >= 4096:
                     # adversarially unique query texts must not grow
                     # host memory forever; a flush re-prepares
@@ -307,7 +355,8 @@ class QueryService:
             # memoize, so this runs once per template, never on the
             # warm path
             from repro.core.analysis.check import verify_plan
-            verify_plan(pq.plan, db=self.db, text=text)
+            with self.tracer.span("verify", cat="prepare"):
+                verify_plan(pq.plan, db=self.db, text=text)
         return pq
 
     @staticmethod
@@ -324,29 +373,40 @@ class QueryService:
     # -- cache plumbing ----------------------------------------------------
 
     def _key(self, sig: str, cfg: ExecConfig,
-             batch: Optional[int] = None) -> tuple:
+             batch: Optional[int] = None,
+             profile: bool = False) -> tuple:
         return (sig, cfg.cap_key(), self.mode,
-                self.executor.num_partitions, batch)
+                self.executor.num_partitions, batch, profile)
 
     def compiled(self, plan: A.Op, cfg: ExecConfig,
                  sig: Optional[str] = None, param_specs: tuple = (),
                  batch: Optional[int] = None) -> CompiledPlan:
-        key = self._key(sig if sig is not None else repr(plan), cfg,
-                        batch)
+        profile = self._profile_mode
+        sig = sig if sig is not None else repr(plan)
+        key = self._key(sig, cfg, batch, profile)
         cp = self._cache.get(key)
         if cp is not None:
             self._cache.move_to_end(key)
             self.stats.cache_hits += 1
             return cp
         self.stats.cache_misses += 1
-        cp = self.executor.compile(plan, mode=self.mode, mesh=self.mesh,
-                                   config=cfg, param_specs=param_specs,
-                                   batch=batch)
+        t0 = time.perf_counter()  # lint: allow(DET001) — compile-time metric, cold path only
+        with self.tracer.span("compile", cat="service") as span:
+            cp = self.executor.compile(plan, mode=self.mode,
+                                       mesh=self.mesh, config=cfg,
+                                       param_specs=param_specs,
+                                       batch=batch, profile=profile)
+            span.set(sig=sig_digest(sig), batch=batch,
+                     profile=profile)
         # counted after the compile succeeds, so `stats.compiles` stays
         # the exact mirror of `executor.compile_count` on every path —
         # including regrowth-retry recompiles (scan / join_bucket /
-        # join_cap / group_cap), which tests pin as an invariant
+        # join_cap / group_cap) and explain's profile-mode compiles,
+        # which tests pin as an invariant
         self.stats.compiles += 1
+        h = self._history_for(sig)
+        h["compiles"] += 1
+        h["compile_s"] += time.perf_counter() - t0  # lint: allow(DET001)
         self._cache[key] = cp
         while len(self._cache) > self.cache_capacity:
             self._cache.popitem(last=False)
@@ -371,6 +431,33 @@ class QueryService:
         self._good_cfg.move_to_end(sig)
         while len(self._good_cfg) > self._good_cfg_capacity:
             self._good_cfg.popitem(last=False)
+
+    def _history_for(self, sig: str) -> dict:
+        """Per-signature compile/regrowth history (explain's
+        compile-vs-execute split and regrowth annotations). Written
+        only on cold paths."""
+        h = self._sig_history.get(sig)
+        if h is None:
+            h = {"compiles": 0, "compile_s": 0.0, "regrowths": []}
+            self._sig_history[sig] = h
+            while len(self._sig_history) > self._good_cfg_capacity:
+                self._sig_history.popitem(last=False)
+        return h
+
+    def _note_regrow(self, sig: str, old: ExecConfig,
+                     new: ExecConfig) -> None:
+        """Record one regrowth rung: which caps grew (overflow-by-cap
+        metric, per-signature history, tracer instant)."""
+        grown = [(f.name, getattr(old, f.name), getattr(new, f.name))
+                 for f in dataclasses.fields(ExecConfig)
+                 if getattr(old, f.name) != getattr(new, f.name)]
+        for cap, _, _ in grown:
+            self.stats.overflows_by_cap[cap] = \
+                self.stats.overflows_by_cap.get(cap, 0) + 1
+        self._history_for(sig)["regrowths"].extend(grown)
+        self.tracer.event("regrow-retry", cat="service",
+                          sig=sig_digest(sig),
+                          **{cap: n for cap, _, n in grown})
 
     def _note_binding(self, sig: str, values: tuple) -> None:
         key = (sig, values)
@@ -582,18 +669,22 @@ class QueryService:
         self._note_binding(pq.signature, values)
         cfg = (self._good_cfg.get(pq.signature)
                or self._presized_config(pq.plan))
-        for attempt in range(self.max_retries + 1):
-            cp = self.compiled(pq.plan, cfg, sig=pq.signature,
-                               param_specs=pq.specs)
-            rs = self.executor.run_compiled(cp, params=params)
-            self.stats.runs += 1
-            if not rs.overflow:
-                self._note_good_cfg(pq.signature, cfg)
-                return rs
-            if attempt == self.max_retries:
-                break
-            cfg = self._grown_config(cfg, rs)
-            self.stats.retries += 1
+        with self.tracer.span("execute", cat="service") as span:
+            span.set(sig=sig_digest(pq.signature))
+            for attempt in range(self.max_retries + 1):
+                cp = self.compiled(pq.plan, cfg, sig=pq.signature,
+                                   param_specs=pq.specs)
+                rs = self.executor.run_compiled(cp, params=params)
+                self.stats.runs += 1
+                if not rs.overflow:
+                    self._note_good_cfg(pq.signature, cfg)
+                    return rs
+                if attempt == self.max_retries:
+                    break
+                grown = self._grown_config(cfg, rs)
+                self._note_regrow(pq.signature, cfg, grown)
+                cfg = grown
+                self.stats.retries += 1
         raise QueryOverflowError(
             f"still overflowing after {self.max_retries} regrowth "
             f"retries (scan_cap={cfg.scan_cap}, "
@@ -623,24 +714,29 @@ class QueryService:
         stacked = stack_params(bound, bucket)
         cfg = (self._good_cfg.get(sig)
                or self._presized_config(pq.plan))
-        for attempt in range(self.max_retries + 1):
-            cp = self.compiled(pq.plan, cfg, sig=sig,
-                               param_specs=pq.specs, batch=bucket)
-            rss = self.executor.run_compiled_batch(cp, stacked,
-                                                   len(bound))
-            self.stats.runs += 1
-            if not any(rs.overflow for rs in rss):
-                self._note_good_cfg(sig, cfg)
-                self.stats.executions += len(bound)
-                self.stats.batches += 1
-                self.stats.batched_requests += len(bound)
-                for v in values_list:
-                    self._note_binding(sig, v)
-                return rss
-            if attempt == self.max_retries:
-                break
-            cfg = self._grown_config(cfg, _merged_overflow(rss))
-            self.stats.retries += 1
+        with self.tracer.span("serve-group", cat="service") as span:
+            span.set(sig=sig_digest(sig), requests=len(bound),
+                     bucket=bucket)
+            for attempt in range(self.max_retries + 1):
+                cp = self.compiled(pq.plan, cfg, sig=sig,
+                                   param_specs=pq.specs, batch=bucket)
+                rss = self.executor.run_compiled_batch(cp, stacked,
+                                                       len(bound))
+                self.stats.runs += 1
+                if not any(rs.overflow for rs in rss):
+                    self._note_good_cfg(sig, cfg)
+                    self.stats.executions += len(bound)
+                    self.stats.batches += 1
+                    self.stats.batched_requests += len(bound)
+                    for v in values_list:
+                        self._note_binding(sig, v)
+                    return rss
+                if attempt == self.max_retries:
+                    break
+                grown = self._grown_config(cfg, _merged_overflow(rss))
+                self._note_regrow(sig, cfg, grown)
+                cfg = grown
+                self.stats.retries += 1
         raise QueryOverflowError(
             f"batch still overflowing after {self.max_retries} "
             f"regrowth retries (scan_cap={cfg.scan_cap}, "
@@ -773,6 +869,86 @@ class QueryService:
         if good is not None:
             return good.scan_cap or self._scan_ceiling
         return self._row_cost.get(sig, self._scan_ceiling)
+
+    # -- explain / profiling -----------------------------------------------
+
+    @contextlib.contextmanager
+    def _profiling(self):
+        """Arm profile-mode compilation: while active, ``compiled()``
+        keys and compiles profile variants (executor ``profile=True``,
+        per-op row counts in the outputs) separately from serving
+        variants — the serving cache entries and the warm path are
+        untouched."""
+        prev = self._profile_mode
+        self._profile_mode = True
+        try:
+            yield
+        finally:
+            self._profile_mode = prev
+
+    def explain(self, query: Query,
+                bindings: Optional[Sequence] = None, *,
+                profile: bool = False, path: str = "prepared"):
+        """Operator-annotated plan profile (obs/profile.QueryProfile).
+
+        ``profile=False`` joins only static facts: the plan tree, the
+        cap that bounds each operator, capacity-flow static bounds and
+        the config the service would run. ``profile=True`` runs the
+        query once through a profile-mode compilation and adds runtime
+        facts: global valid rows out of every (unfused) operator, cap
+        utilization vs the actual (possibly regrown) capacity,
+        overflow/regrowth events, and the compile-vs-execute wall
+        split. ``path`` picks the serving route of the profiled run:
+        "prepared" (scalar execute), "batched" (a serve_group
+        dispatch), or "scheduled" (a standalone admission/DRR runtime
+        in front of the same service). Profiled results stay exact —
+        the profile run goes through the same regrowth ladder."""
+        assert path in ("prepared", "batched", "scheduled"), path
+        from repro.core.obs.profile import build_profile
+        pq = self.prepare(query)
+        sig = pq.signature
+        if not profile:
+            cfg = (self._good_cfg.get(sig)
+                   or self._presized_config(pq.plan))
+            return build_profile(pq, db=self.db, config=cfg,
+                                 path="static", mode=self.mode)
+        h = self._history_for(sig)
+        compile_s0, nregrow0 = h["compile_s"], len(h["regrowths"])
+        snap = self.stats.snapshot()
+        t0 = time.perf_counter()  # lint: allow(DET001) — explain-only wall split
+        with self._profiling():
+            if path == "batched" and pq.specs:
+                values = self._values_for(pq, bindings)
+                rs = self.serve_group(pq, [values, values])[0]
+            elif path == "scheduled":
+                from repro.core.serving.scheduler import ServingRuntime
+                prev_clock = self.tracer.clock
+                try:
+                    # standalone runtime: the service's main runtime
+                    # (and its backlog) stays untouched
+                    rt = ServingRuntime(self)
+                    ticket = rt.submit(pq, bindings)
+                    rt.drain()
+                finally:
+                    self.tracer.clock = prev_clock
+                if ticket.error is not None:
+                    raise ticket.error
+                rs = ticket.result
+            else:
+                # "prepared" (and "batched" on a parameterless plan,
+                # which has nothing to stack)
+                rs = self.execute(pq, bindings)
+        total_s = time.perf_counter() - t0  # lint: allow(DET001)
+        delta = self.stats.diff(snap)
+        compile_s = h["compile_s"] - compile_s0
+        cfg = (self._good_cfg.get(sig)
+               or self._presized_config(pq.plan))
+        return build_profile(
+            pq, db=self.db, config=cfg, rs=rs, path=path,
+            mode=self.mode, compile_s=compile_s,
+            execute_s=max(total_s - compile_s, 0.0),
+            compiles=delta.compiles, retries=delta.retries,
+            regrowths=h["regrowths"][nregrow0:])
 
 
 def _merged_overflow(rss: Sequence[ResultSet]):

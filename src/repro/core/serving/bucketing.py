@@ -158,6 +158,11 @@ class CostBasedBucketing:
                 row_cost=max(int(row_cost), 1),
                 compile_cost=self.compile_cost)
             self._dirty.discard(sig)
+            from repro.core.obs import trace as obs_trace
+            from repro.core.obs.trace import sig_digest
+            obs_trace.current().event(
+                "bucket-refit", cat="serving", sig=sig_digest(sig),
+                ladder=list(self._ladder[sig]))
         return self._ladder.get(sig, ())
 
     def bucket_for(self, sig: str, size: int) -> int:

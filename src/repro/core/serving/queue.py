@@ -17,6 +17,8 @@ import dataclasses
 from collections import deque
 from typing import Any, Optional
 
+from repro.core.obs.trace import NULL_TRACER
+
 
 class VirtualClock:
     """Deterministic monotonic time source. The runtime advances it
@@ -65,6 +67,10 @@ class Ticket:
     error: Optional[Exception] = None
     completion: Optional[float] = None
     stream: Optional[str] = None
+    # filled when the ticket completes past its deadline: what the
+    # completing dispatch paid for — "compile-on-path",
+    # "regrowth-retry", or "queued-behind" (see RuntimeStats)
+    slo_cause: Optional[str] = None
 
     @property
     def done(self) -> bool:
@@ -88,11 +94,12 @@ class AdmissionQueue:
     """
 
     def __init__(self, clock: VirtualClock, *, window: float,
-                 max_fill: int):
+                 max_fill: int, tracer=NULL_TRACER):
         assert window >= 0 and max_fill >= 1
         self.clock = clock
         self.window = window
         self.max_fill = max_fill
+        self.tracer = tracer        # window-close instant events
         # each entry: (close_time, [tickets]) — FIFO, oldest first
         self._windows: deque[tuple[float, list[Ticket]]] = deque()
         self.admitted = 0
@@ -129,10 +136,14 @@ class AdmissionQueue:
             close, tickets = self._windows[0]
             if len(tickets) >= self.max_fill:
                 self.closed_by_fill += 1
+                cause = "fill"
             elif close <= now:
                 self.closed_by_deadline += 1
+                cause = "deadline"
             else:
                 break
+            self.tracer.event("window-close", cat="serving",
+                              cause=cause, size=len(tickets))
             out.extend(tickets)
             self._windows.popleft()
         return out
@@ -150,5 +161,7 @@ class AdmissionQueue:
         while self._windows:
             _, tickets = self._windows.popleft()
             self.closed_by_deadline += 1
+            self.tracer.event("window-close", cat="serving",
+                              cause="flush", size=len(tickets))
             out.extend(tickets)
         return out

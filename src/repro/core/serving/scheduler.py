@@ -28,6 +28,9 @@ import time
 from collections import OrderedDict, deque
 from typing import Optional
 
+from repro.core.obs import trace as obs_trace
+from repro.core.obs.metrics import stats_diff, stats_snapshot
+from repro.core.obs.trace import NULL_TRACER, sig_digest
 from repro.core.serving.bucketing import make_policy
 from repro.core.serving.queue import AdmissionQueue, Ticket, VirtualClock
 from repro.core.serving.window import WindowedGroupState, group_spec_of
@@ -98,12 +101,26 @@ class RuntimeStats:
     real_rows: int = 0          # real slots x per-request row cost
     steps: int = 0              # scheduler sweeps
     slo_misses: int = 0         # tickets completed past their deadline
+    # per-tenant breakdown of slo_misses (sums to it) and per-cause
+    # attribution: "compile-on-path" (the dispatch that completed the
+    # ticket paid a trace+compile), "regrowth-retry" (it regrew a
+    # capacity and retried), "queued-behind" (the work was warm — the
+    # deadline was blown waiting on windows/scheduling). Tickets carry
+    # the same verdict in ``Ticket.slo_cause``.
+    slo_misses_by_tenant: dict = dataclasses.field(default_factory=dict)
+    slo_miss_causes: dict = dataclasses.field(default_factory=dict)
 
     @property
     def padding_waste(self) -> float:
         """Fraction of executed rows that were phantom padding."""
         total = self.padded_rows + self.real_rows
         return self.padded_rows / total if total else 0.0
+
+    def snapshot(self) -> "RuntimeStats":
+        return stats_snapshot(self)
+
+    def diff(self, since: "RuntimeStats") -> "RuntimeStats":
+        return stats_diff(self, since)
 
 
 class ServingRuntime:
@@ -122,8 +139,14 @@ class ServingRuntime:
                  measure_service_time: bool = False):
         self.service = service
         self.clock = clock or VirtualClock()
+        # observability: share the service's tracer; serving-stage
+        # spans carry virtual timestamps once the clock is bound
+        self.tracer = getattr(service, "tracer", NULL_TRACER)
+        if self.tracer.enabled:
+            self.tracer.bind_clock(self.clock)
         self.queue = AdmissionQueue(self.clock, window=window,
-                                    max_fill=max_fill)
+                                    max_fill=max_fill,
+                                    tracer=self.tracer)
         self.scheduler = FairScheduler(quantum=quantum)
         if policy is None:
             policy = "cost"
@@ -134,6 +157,20 @@ class ServingRuntime:
         self.policy = policy
         self.measure_service_time = measure_service_time
         self.stats = RuntimeStats()
+        # register this runtime's stats + latency histograms with the
+        # service's metrics registry. Re-binding the "runtime" prefix
+        # on a second runtime is intentional: the live one wins.
+        metrics = getattr(service, "metrics", None)
+        if metrics is not None:
+            metrics.register_stats("runtime", self.stats)
+            self._lat_tenant = metrics.histogram(
+                "runtime_latency_vs",
+                help="per-tenant virtual completion latency (s)")
+            self._lat_sig = metrics.histogram(
+                "runtime_latency_sig_vs",
+                help="per-signature virtual completion latency (s)")
+        else:
+            self._lat_tenant = self._lat_sig = None
         self._tickets: list[Ticket] = []
         # (sig, group_size, bucket, row_cost) per batched dispatch —
         # the trace a CostBasedBucketing ladder can be fitted from
@@ -180,8 +217,11 @@ class ServingRuntime:
                 nxt = self.queue.next_close()
             self.clock.advance_to(at)
         now = self.clock.now()
-        pq = self.service.prepare(query)
-        values = self.service._values_for(pq, bindings)
+        with self.tracer.span("admit", cat="serving", tenant=tenant,
+                              seq=self.stats.submitted) as sp:
+            pq = self.service.prepare(query)
+            sp.set(sig=sig_digest(pq.signature))
+            values = self.service._values_for(pq, bindings)
         if stream is not None:
             spec = group_spec_of(pq.plan)   # raises on non-mergeable
             st = self._streams.get(stream)
@@ -230,40 +270,68 @@ class ServingRuntime:
         return done
 
     def _dispatch(self, sig: str, tickets: list[Ticket]) -> int:
+        # install this runtime's tracer as the ambient one for the
+        # whole dispatch: nested instants fired from deeper layers
+        # (bucket-refit in bucketing.py, stream-absorb in window.py,
+        # rewrite-rule under a cold prepare) attach to the trace
+        # without those modules importing the runtime
+        with obs_trace.using(self.tracer):
+            return self._dispatch_inner(sig, tickets)
+
+    def _dispatch_inner(self, sig: str, tickets: list[Ticket]) -> int:
         svc = self.service
         pq = tickets[0].query
         row_cost = svc.row_cost(pq)
+        # snapshot service counters before the work so an SLO miss can
+        # be attributed to what this dispatch actually paid for:
+        # compiles on the critical path, regrowth retries, or plain
+        # queueing behind other windows (all counters warm)
+        before = svc.stats.snapshot()
         # opt-in latency measurement, never on the result path
         t0 = (time.perf_counter()  # lint: allow(DET001)
               if self.measure_service_time else 0.0)
-        try:
-            if len(tickets) == 1 or not pq.specs:
-                for t in tickets:
-                    t.result = svc.execute(t.query, t.values)
-                self.stats.scalar_dispatches += len(tickets)
-            else:
-                size = len(tickets)
-                # decide with what the policy knows, THEN learn: the
-                # fitted ladder only ever serves later windows, so a
-                # cold signature pads pow2 instead of compiling a
-                # bucket bespoke to its first group
-                bucket = self.policy.bucket_for(sig, size)
-                self.policy.observe(sig, size)
-                rss = svc.serve_group(
-                    pq, [t.values for t in tickets], bucket=bucket)
-                for t, rs in zip(tickets, rss):
-                    t.result = rs
-                self.stats.batches += 1
-                self.stats.padded_slots += bucket - size
-                self.stats.padded_rows += (bucket - size) * row_cost
-                self.dispatch_log.append((sig, size, bucket, row_cost))
-        except Exception as e:    # exactness failures surface per ticket
-            for t in tickets:
-                if t.result is None:
-                    t.error = e
+        with self.tracer.span("dispatch", cat="serving",
+                              sig=sig_digest(sig),
+                              requests=len(tickets)) as span:
+            try:
+                if len(tickets) == 1 or not pq.specs:
+                    for t in tickets:
+                        t.result = svc.execute(t.query, t.values)
+                    self.stats.scalar_dispatches += len(tickets)
+                    span.set(mode="scalar")
+                else:
+                    size = len(tickets)
+                    # decide with what the policy knows, THEN learn:
+                    # the fitted ladder only ever serves later
+                    # windows, so a cold signature pads pow2 instead
+                    # of compiling a bucket bespoke to its first group
+                    bucket = self.policy.bucket_for(sig, size)
+                    self.policy.observe(sig, size)
+                    self.tracer.event("bucket", cat="serving",
+                                      sig=sig_digest(sig), size=size,
+                                      bucket=bucket)
+                    rss = svc.serve_group(
+                        pq, [t.values for t in tickets], bucket=bucket)
+                    for t, rs in zip(tickets, rss):
+                        t.result = rs
+                    self.stats.batches += 1
+                    self.stats.padded_slots += bucket - size
+                    self.stats.padded_rows += (bucket - size) * row_cost
+                    self.dispatch_log.append((sig, size, bucket,
+                                              row_cost))
+                    span.set(mode="batched", bucket=bucket)
+            except Exception as e:  # exactness failures surface per
+                for t in tickets:   # ticket
+                    if t.result is None:
+                        t.error = e
+                span.set(error=type(e).__name__)
         if self.measure_service_time:
             self.clock.advance(
                 time.perf_counter() - t0)  # lint: allow(DET001)
+        delta = svc.stats.diff(before)
+        cause = ("compile-on-path" if delta.compiles > 0 else
+                 "regrowth-retry" if delta.retries > 0 else
+                 "queued-behind")
         # only work that actually completed counts as executed rows /
         # dispatched requests — an errored group must not inflate
         # throughput or deflate padding_waste in the benchmark record
@@ -272,8 +340,20 @@ class ServingRuntime:
         now = self.clock.now()
         for t in tickets:
             t.completion = now
+            latency = now - t.arrival
+            if self._lat_tenant is not None:
+                self._lat_tenant.labels(tenant=t.tenant) \
+                    .observe(latency)
+                self._lat_sig.labels(sig=sig_digest(sig)) \
+                    .observe(latency)
             if now > t.deadline:
+                t.slo_cause = cause
                 self.stats.slo_misses += 1
+                self.stats.slo_misses_by_tenant[t.tenant] = \
+                    self.stats.slo_misses_by_tenant.get(t.tenant,
+                                                        0) + 1
+                self.stats.slo_miss_causes[cause] = \
+                    self.stats.slo_miss_causes.get(cause, 0) + 1
             if t.stream is not None:
                 if t.result is not None:
                     # fold this window's partial groups into the
@@ -322,7 +402,11 @@ class ServingRuntime:
         """Run to quiescence: close every pending window (advancing
         the clock to each close time, so deadline closes happen at
         their deadline, not "now") and dispatch until no backlog
-        remains. Returns all tickets in submission order."""
+        remains. Returns all tickets in submission order; each ticket
+        that missed its deadline carries its attributed cause in
+        ``slo_cause`` and the aggregate per-tenant / per-cause
+        breakdown is live in ``stats.slo_misses_by_tenant`` /
+        ``stats.slo_miss_causes``."""
         while len(self.queue) or self.scheduler.backlog():
             if self.step(budget):
                 continue

@@ -135,6 +135,9 @@ class WindowedGroupState:
                 raise ValueError(f"row arity {len(r)} != spec arity "
                                  f"{self.spec.arity}")
         self._windows[window_id] = [tuple(r) for r in rows]
+        from repro.core.obs import trace as obs_trace
+        obs_trace.current().event("stream-absorb", cat="serving",
+                                  window=window_id, rows=len(rows))
 
     def merge(self, other: "WindowedGroupState") -> "WindowedGroupState":
         if other.spec != self.spec:

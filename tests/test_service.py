@@ -37,13 +37,14 @@ def test_tiny_caps_regrow_to_exact(weather_db, oracle, name):
     assert svc.stats.retries >= 1      # the tiny cap did overflow
     # second execution: cache hit, zero new compiles (compile-counter
     # on both the service and the underlying executor)
-    compiles = svc.stats.compiles
+    snap = svc.stats.snapshot()
     ex_compiles = svc.executor.compile_count
     rs2 = svc.execute(plan)
     check(rs2, oracle, name)
-    assert svc.stats.compiles == compiles
+    delta = svc.stats.diff(snap)
+    assert delta.compiles == 0
     assert svc.executor.compile_count == ex_compiles
-    assert svc.stats.cache_hits >= 1
+    assert delta.cache_hits >= 1
 
 
 def test_presized_caps_avoid_retries(weather_db, oracle):
@@ -63,10 +64,11 @@ def test_presized_caps_avoid_retries(weather_db, oracle):
 def test_repeated_query_hits_cache(weather_db, oracle):
     svc = QueryService(weather_db)
     check(svc.execute(ALL["Q4"]), oracle, "Q4")
-    compiles = svc.stats.compiles
+    snap = svc.stats.snapshot()
     check(svc.execute(ALL["Q4"]), oracle, "Q4")
-    assert svc.stats.compiles == compiles
-    assert svc.stats.cache_hits == 1
+    delta = svc.stats.diff(snap)
+    assert delta.compiles == 0
+    assert delta.cache_hits == 1
     assert svc.cache_size() == 1
 
 
@@ -134,9 +136,9 @@ def test_lru_eviction_capacity_one(weather_db, oracle):
     check(svc.execute(ALL["Q2"]), oracle, "Q2")     # evicts Q4
     assert svc.cache_size() == 1
     assert svc.stats.evictions == 1
-    compiles = svc.stats.compiles
+    snap = svc.stats.snapshot()
     check(svc.execute(ALL["Q4"]), oracle, "Q4")     # must recompile
-    assert svc.stats.compiles == compiles + 1
+    assert svc.stats.diff(snap).compiles == 1
     assert svc.cache_size() == 1
 
 
@@ -149,11 +151,11 @@ def test_lru_recency_order(weather_db, oracle):
     check(svc.execute(ALL["Q2"]), oracle, "Q2")
     check(svc.execute(ALL["Q4"]), oracle, "Q4")     # touch Q4
     check(svc.execute(ALL["Q1"]), oracle, "Q1")     # evicts Q2
-    compiles = svc.stats.compiles
+    snap = svc.stats.snapshot()
     check(svc.execute(ALL["Q4"]), oracle, "Q4")     # still cached
-    assert svc.stats.compiles == compiles
+    assert svc.stats.diff(snap).compiles == 0
     check(svc.execute(ALL["Q2"]), oracle, "Q2")     # was evicted
-    assert svc.stats.compiles == compiles + 1
+    assert svc.stats.diff(snap).compiles == 1
 
 
 def test_group_cap_bounds_segment_space(weather_db):
@@ -189,14 +191,14 @@ def test_group_regrowth_shares_plans_across_variants(weather_db):
     svc = QueryService(weather_db, ExecConfig(group_cap=2))
     svc.execute(ALL["Q9"])
     assert svc.stats.retries >= 1
-    compiles = svc.stats.compiles
-    retries = svc.stats.retries
+    snap = svc.stats.snapshot()
     variant = ALL["Q9"].replace("TMAX", "TMIN")
     rs = svc.execute(variant)
     assert not rs.overflow and rs.rows()
-    assert svc.stats.compiles == compiles      # shared executable
-    assert svc.stats.retries == retries        # ladder skipped
-    assert svc.stats.cache_hits >= 1
+    delta = svc.stats.diff(snap)
+    assert delta.compiles == 0                 # shared executable
+    assert delta.retries == 0                  # ladder skipped
+    assert delta.cache_hits >= 1
 
 
 def test_presize_sizes_group_cap_from_statistics(weather_db, oracle):
