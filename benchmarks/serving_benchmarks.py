@@ -191,7 +191,7 @@ def _measure(db, wl, repeats: int, label: str, smoke: bool) -> dict:
     return results
 
 
-SECTIONS = ("groupby", "ordered", "multitenant", "obs")
+SECTIONS = ("groupby", "ordered", "multitenant", "obs", "kernels")
 
 
 def _merge_record(out_path: str, section, results: dict) -> None:
@@ -341,6 +341,13 @@ def serving_ordered(variants: int = 64, repeats: int = 3,
         raise RuntimeError(
             f"top-k pushdown only cut materialized group rows by "
             f"{reduction:.1%} (< 30%) vs full-sort-then-slice")
+    if not smoke and results["warm_speedup"] < 1.15:
+        # the regression this suite exists to catch: materializing
+        # fewer rows must actually serve FASTER warm, not just
+        # smaller — the fused segment engine carries this gate
+        raise RuntimeError(
+            f"top-k pushdown warm speedup {results['warm_speedup']:.3f}"
+            f"x < 1.15x over full-sort-then-slice (QPS regression)")
     _merge_record(out_path, "ordered", results)
     return results
 
@@ -583,10 +590,181 @@ def serving_obs(variants: int = 64, repeats: int = 3,
     return results
 
 
+def serving_kernels(variants: int = 64, repeats: int = 3,
+                    out_path: str = "BENCH_serving.json",
+                    smoke: bool = False) -> dict:
+    """The kernel-policy suite, recorded under "kernels": micro-sweeps
+    of the two kernel routes against their jnp references *on this
+    backend*, gating the defaults ``resolve_kernel_policy`` and
+    ``kernels.ops.SEG_DENSE_NSEG_MAX`` commit to. Every measurement
+    runs under ``jax.vmap`` over 4 partitions — the partition
+    simulation every query executes in, and the context where XLA CPU
+    batches scatters into serial loops (unbatched micro-timings pick
+    the wrong winners). Two sweeps:
+
+      join probe      — Pallas block kernel (interpreted off-TPU) vs
+                        the sorted-hash jnp probe across build widths
+      segment engine  — the fused segment aggregate entry point
+                        (``kernels.ops.segmented_aggregate``: dense
+                        one-hot twin small, scatter fallback large) vs
+                        the legacy per-aggregate scatter path across
+                        segment-capacity regimes
+
+    Gates (BEFORE the json write): the committed per-backend defaults
+    must match the measured winner — a policy flip that stops being
+    justified by measurement fails the run instead of silently
+    shipping the slower route. ``variants`` is accepted for
+    suite-signature uniformity and ignored."""
+    import functools
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.executor import hash_join_probe
+    from repro.kernels import ref as kref
+    from repro.kernels.ops import SEG_DENSE_NSEG_MAX
+    from repro.kernels.ops import segmented_aggregate as fused_agg
+
+    del variants
+    backend = jax.default_backend()
+    label = "serving_kernels"
+    parts = 4
+    reps = 3 if smoke else max(repeats, 7)
+    rng = np.random.default_rng(0)
+
+    def best_of(fn, *a):
+        f = jax.jit(jax.vmap(fn))
+        jax.block_until_ready(f(*a))           # compile + warm
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(f(*a))
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    results: dict = {"backend": backend, "smoke": smoke,
+                     "vmap_partitions": parts,
+                     "seg_dense_nseg_max": SEG_DENSE_NSEG_MAX}
+
+    # -- join probe sweep ------------------------------------------------
+    # probe width stays at serving scale even in smoke: tiny probes are
+    # noise-dominated and their winner flips run to run, while the
+    # policy question is about the regime queries actually run in
+    n_probe = 2048
+    widths = (128, 512) if smoke else (128, 512, 2048)
+    pk = jnp.asarray(rng.integers(0, 1 << 20, (parts, n_probe)),
+                     jnp.int32)
+    pv = jnp.ones((parts, n_probe), bool)
+    kernel_decisive = []    # kernel beats jnp beyond the noise band
+    jnp_decisive = []       # jnp beats kernel beyond the noise band
+    for w in widths:
+        bk = jnp.asarray(rng.integers(0, 1 << 20, (parts, w)), jnp.int32)
+        bv = jnp.ones((parts, w), bool)
+
+        def probe(bk, bv, pk, pv, up):
+            return hash_join_probe((bk,), bv, (pk,), pv, 4,
+                                   use_pallas=up)
+
+        t_ref = best_of(functools.partial(probe, up=False),
+                        bk, bv, pk, pv)
+        t_pal = best_of(functools.partial(probe, up=True),
+                        bk, bv, pk, pv)
+        results[f"join_jnp_ms_w{w}"] = t_ref * 1e3
+        results[f"join_pallas_ms_w{w}"] = t_pal * 1e3
+        results[f"join_pallas_over_jnp_w{w}"] = t_pal / t_ref
+        kernel_decisive.append(t_pal < 0.8 * t_ref)
+        jnp_decisive.append(t_ref < 0.8 * t_pal)
+
+    # -- segment engine sweep --------------------------------------------
+    # serving-scale rows even in smoke (tiny sweeps are noise-bound,
+    # see the probe sweep note); both sides compute the IDENTICAL full
+    # stats set (counts + sums/mins/maxs per value column) — the gate
+    # is about the dispatch threshold, so the work must match
+    n_rows = 4096
+    caps = (16, 32) if smoke else (16, 32, 256)
+    seg_all = jnp.asarray(rng.integers(0, max(caps), (parts, n_rows)),
+                          jnp.int32)
+    vals = jnp.asarray(rng.normal(size=(parts, n_rows, 2)), jnp.float32)
+    valid = jnp.asarray(rng.random((parts, n_rows)) < 0.9)
+    oks = valid[:, :, None] & jnp.ones((parts, n_rows, 2), bool)
+
+    def legacy_group(vals, ok, seg, valid, s):
+        # the pre-fusion executor shape: one scatter pass per aggregate
+        ones = jnp.ones(seg.shape, jnp.float32)
+        _, counts = kref.segmented_sum_count(ones, seg, valid, s)
+        safe = jnp.clip(seg, 0, s - 1)
+        outs = [counts]
+        for c in range(vals.shape[1]):
+            col = jnp.where(ok[:, c], vals[:, c], 0.0)
+            sums, _ = kref.segmented_sum_count(col, seg, valid, s)
+            mn = jnp.full((s,), jnp.inf).at[safe].min(
+                jnp.where(ok[:, c], vals[:, c], jnp.inf))
+            mx = jnp.full((s,), -jnp.inf).at[safe].max(
+                jnp.where(ok[:, c], vals[:, c], -jnp.inf))
+            outs += [sums, mn, mx]
+        return tuple(outs)
+
+    dense_losses = []       # caps where the dense engine loses >20%
+    fallback_ratios = []    # fused/legacy where the scatter fallback runs
+    for s in caps:
+        seg = jnp.minimum(seg_all, s - 1)
+        t_leg = best_of(functools.partial(legacy_group, s=s),
+                        vals, oks, seg, valid)
+        t_fus = best_of(functools.partial(fused_agg, num_segments=s),
+                        vals, oks, seg, valid)
+        results[f"seg_legacy_ms_s{s}"] = t_leg * 1e3
+        results[f"seg_fused_ms_s{s}"] = t_fus * 1e3
+        results[f"seg_fused_speedup_s{s}"] = t_leg / t_fus
+        if s <= SEG_DENSE_NSEG_MAX:
+            if t_fus > 1.25 * t_leg:
+                dense_losses.append(s)
+        else:
+            fallback_ratios.append((s, t_fus / t_leg))
+
+    for k, v in results.items():
+        if isinstance(v, (int, float)):
+            row(label, backend, k, float(v))
+
+    # gates BEFORE the json write: committed defaults == measured
+    # winner.  A contradiction only counts when the other probe wins
+    # DECISIVELY (>20% faster) at every width — within the noise band
+    # the committed default stands.
+    policy_join = backend == "tpu"
+    if not policy_join and all(kernel_decisive):
+        raise RuntimeError(
+            f"use_pallas_join default (False on {backend}) is "
+            f"decisively contradicted: the kernel probe wins >20% at "
+            f"all {len(kernel_decisive)} widths")
+    if policy_join and all(jnp_decisive):
+        raise RuntimeError(
+            f"use_pallas_join default (True on {backend}) is "
+            f"decisively contradicted: the jnp probe wins >20% at "
+            f"all {len(jnp_decisive)} widths")
+    if dense_losses:
+        raise RuntimeError(
+            f"use_pallas_segments=True default contradicts the sweep: "
+            f"the dense engine loses >20% to the legacy scatter path "
+            f"at caps {dense_losses} (<= SEG_DENSE_NSEG_MAX="
+            f"{SEG_DENSE_NSEG_MAX}) on {backend}")
+    slow = [(s, r) for s, r in fallback_ratios if r > 1.5]
+    if slow:
+        # above the dense threshold the entry point dispatches to the
+        # scatter fallback — same algorithm as legacy, so anything
+        # beyond noise means the dispatch threshold is mis-set
+        raise RuntimeError(
+            f"segment-engine scatter fallback regressed vs legacy "
+            f"beyond noise at {slow} on {backend} — "
+            f"SEG_DENSE_NSEG_MAX is mis-tuned")
+    _merge_record(out_path, "kernels", results)
+    return results
+
+
 SUITES = {"scan_join": serving, "groupby": serving_groupby,
           "ordered": serving_ordered,
           "multitenant": serving_multitenant,
-          "obs": serving_obs}
+          "obs": serving_obs,
+          "kernels": serving_kernels}
 
 
 def main() -> None:

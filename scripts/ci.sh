@@ -29,6 +29,12 @@
 #                                 profile unit+property tests plus the
 #                                 zero-cost-when-off benchmark gate
 #                                 and trace_event export validation)
+#   scripts/ci.sh --kernels       also run the kernel stage standalone:
+#                                 the segment-engine parity suite under
+#                                 REPRO_KERNEL_INTERPRET=1 (the Pallas
+#                                 interpreter executes the exact TPU
+#                                 kernel bodies on CPU) plus the vmapped
+#                                 kernel-vs-jnp policy sweep smoke
 #   scripts/ci.sh --lint          run ONLY the static stage: the
 #                                 tracing-hazard/determinism linter
 #                                 (file:line findings, nonzero exit)
@@ -46,13 +52,15 @@ DIFFERENTIAL=0
 SCHEDULER=0
 PROPERTIES=0
 OBS=0
+KERNELS=0
 while [ "${1:-}" = "--differential" ] || [ "${1:-}" = "--scheduler" ] \
         || [ "${1:-}" = "--properties" ] || [ "${1:-}" = "--obs" ] \
-        || [ "${1:-}" = "--lint" ]; do
+        || [ "${1:-}" = "--kernels" ] || [ "${1:-}" = "--lint" ]; do
     if [ "$1" = "--differential" ]; then DIFFERENTIAL=1; fi
     if [ "$1" = "--scheduler" ]; then SCHEDULER=1; fi
     if [ "$1" = "--properties" ]; then PROPERTIES=1; fi
     if [ "$1" = "--obs" ]; then OBS=1; fi
+    if [ "$1" = "--kernels" ]; then KERNELS=1; fi
     if [ "$1" = "--lint" ]; then
         python -m repro.core.analysis.lint src/repro
         python -m repro.core.analysis.verify
@@ -79,7 +87,12 @@ if [ "$SCHEDULER" = "1" ]; then
 fi
 if [ "$PROPERTIES" = "1" ]; then
     python -m pytest -x -q -m "properties and not slow" \
-        tests/test_properties.py
+        tests/test_properties.py tests/test_seg_kernels.py
+fi
+if [ "$KERNELS" = "1" ]; then
+    REPRO_KERNEL_INTERPRET=1 python -m pytest -x -q \
+        tests/test_seg_kernels.py tests/test_kernels.py
+    python -m benchmarks.serving_benchmarks --smoke --suite kernels
 fi
 if [ "$OBS" = "1" ]; then
     python -m pytest -x -q tests/test_obs.py

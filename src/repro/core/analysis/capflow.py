@@ -22,6 +22,13 @@ Three consumers:
 
 No jax at import time: the pass runs on plain plans + build-time
 statistics; the executor registry is imported lazily where compared.
+
+The kernel-policy knobs (``use_pallas_join`` / ``use_pallas_segments``)
+are invisible to this pass by design: they select an implementation
+(Pallas kernel vs jnp twin) for a capacity-bounded stage, never the
+stage's capacity semantics — both paths read the same resolved caps
+and raise the same overflow flags, so a plan's capacity-site set is
+kernel-policy-independent (pinned by the analysis-suite cross-check).
 """
 from __future__ import annotations
 

@@ -42,6 +42,12 @@ OBS001    a ``<obj>.stats.<field>`` increment site under ``core/``
 OBS002    a ``REGISTERED_STATS`` key naming no field of
           ``ServiceStats``/``RuntimeStats`` — a stale registration
           that would export nothing.
+KRN001    a Pallas kernel entry point (a top-level function under
+          ``kernels/`` whose body builds a ``pl.pallas_call``) with no
+          ``kernels/registry.py`` ``KERNEL_REFS`` entry naming an
+          existing ``kernels/ref.py`` function — a kernel without a
+          declared jnp reference has nothing to hold parity against.
+          Stale registry keys (naming no entry point) flag too.
 
 The TRACE rules only apply inside **traced scopes** — the top-level
 functions/classes that execute under ``jax.jit``/``shard_map``
@@ -397,6 +403,93 @@ def lint_registry(repo_src: str) -> list[Finding]:
     return findings
 
 
+# -- kernel-reference registry completeness (cross-file, AST-only) -----------
+
+
+def _kernel_refs(tree: ast.Module) -> Optional[dict]:
+    """The literal KERNEL_REFS dict (None when the assignment is
+    missing — distinct from legitimately empty)."""
+    for node in ast.walk(tree):
+        targets = (node.targets if isinstance(node, ast.Assign)
+                   else [node.target]
+                   if isinstance(node, ast.AnnAssign) else [])
+        if (any(isinstance(t, ast.Name) and t.id == "KERNEL_REFS"
+                for t in targets)
+                and isinstance(node.value, ast.Dict)):
+            return {k.value: v.value
+                    for k, v in zip(node.value.keys, node.value.values)
+                    if isinstance(k, ast.Constant)
+                    and isinstance(v, ast.Constant)}
+    return None
+
+
+def _pallas_entry_points(tree: ast.Module) -> list:
+    """Top-level function names whose body builds a pl.pallas_call."""
+    out = []
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for n in ast.walk(node):
+                if (isinstance(n, ast.Call)
+                        and _attr_chain(n.func) == ["pl",
+                                                    "pallas_call"]):
+                    out.append(node.name)
+                    break
+    return out
+
+
+def lint_kernel_registry(repo_src: str) -> list[Finding]:
+    """KRN001 over a source tree rooted at ``repo_src``: every kernel
+    entry point declares a jnp reference in kernels/registry.py, every
+    declared reference resolves to a kernels/ref.py function, and no
+    registry key is stale."""
+    kdir = os.path.join(repo_src, "repro", "kernels")
+    reg_path = os.path.join(kdir, "registry.py")
+    reg_tree = _parse_file(reg_path)
+    if reg_tree is None:
+        return [Finding("KRN001", repo_src, 0, 0,
+                        "cannot locate repro/kernels/registry.py "
+                        "under this root")]
+    refs = _kernel_refs(reg_tree)
+    if refs is None:
+        return [Finding("KRN001", reg_path, 0, 0,
+                        "no literal KERNEL_REFS dict in "
+                        "kernels/registry.py")]
+    ref_tree = _parse_file(os.path.join(kdir, "ref.py"))
+    ref_fns = ({n.name for n in ref_tree.body
+                if isinstance(n, ast.FunctionDef)}
+               if ref_tree is not None else set())
+
+    findings: list[Finding] = []
+    entry_keys: set = set()
+    for path in _py_files([kdir]):
+        base = os.path.basename(path)
+        if base == "registry.py":
+            continue
+        tree = _parse_file(path)
+        if tree is None:
+            continue
+        mod = base[:-3]
+        for fn in _pallas_entry_points(tree):
+            key = f"{mod}.{fn}"
+            entry_keys.add(key)
+            if key not in refs:
+                findings.append(Finding(
+                    "KRN001", path, 0, 0,
+                    f"kernel entry point {key!r} declares no jnp "
+                    f"reference in kernels/registry.py KERNEL_REFS"))
+            elif refs[key] not in ref_fns:
+                findings.append(Finding(
+                    "KRN001", reg_path, 0, 0,
+                    f"KERNEL_REFS[{key!r}] names {refs[key]!r}, which "
+                    f"is not a function in kernels/ref.py"))
+    for key in sorted(set(refs) - entry_keys):
+        findings.append(Finding(
+            "KRN001", reg_path, 0, 0,
+            f"KERNEL_REFS key {key!r} names no pallas_call entry "
+            f"point under kernels/ — stale registration"))
+    return findings
+
+
 # -- metrics-registry completeness (cross-file, AST-only) --------------------
 
 
@@ -537,6 +630,7 @@ def main(argv: Optional[list] = None) -> int:
         if os.path.isdir(os.path.join(root, "repro", "core")):
             findings.extend(lint_registry(root))
             findings.extend(lint_metrics(root))
+            findings.extend(lint_kernel_registry(root))
             break
     for f in findings:
         print(f)

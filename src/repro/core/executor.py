@@ -17,6 +17,7 @@ same operator pipeline on every node with connectors in between.
 from __future__ import annotations
 
 import dataclasses
+import os
 from functools import partial
 from typing import Any, Callable, Optional
 
@@ -49,7 +50,14 @@ class ExecConfig:
                                           # full segment width)
     join_strategy: str = "broadcast"      # broadcast | repartition
     join_bucket: int = 4                  # hash-bucket probe width
-    use_pallas_join: bool = False         # route probe through kernels/
+    # Kernel-path knobs are tri-state: None defers to
+    # ``resolve_kernel_policy`` at compile time (backend- and
+    # plan-aware defaults, measured by the "kernels" benchmark suite);
+    # True/False pins the route. ``REPRO_FORCE_JNP=1`` overrides both
+    # to False (see README).
+    use_pallas_join: Optional[bool] = None      # join probe kernel
+    use_pallas_segments: Optional[bool] = None  # fused group-by/top-k
+                                                # segment engine
 
     def signature(self) -> tuple:
         """Every config field in declaration order, derived from
@@ -82,6 +90,47 @@ OVERFLOW_FLAGS: dict[str, str] = {
     "group_cap": "overflow_group_cap",
     "topk_cap": "overflow_topk_cap",
 }
+
+
+def resolve_kernel_policy(plan: A.Op, cfg: ExecConfig) -> ExecConfig:
+    """Resolve the tri-state kernel knobs for one compilation.
+
+    Defaults encode the measured winners of the kernels benchmark
+    suite (benchmarks/serving_benchmarks.py --suite kernels), which
+    gates them against a fresh sweep on every full run:
+
+    * ``use_pallas_segments``: True — the fused segment engine (one
+      pass: key-dictionary build, segment-id mapping, reduce, top-k
+      selection) is scatter-free, so on XLA CPU it avoids the serial
+      while-loops that scatter/unique lower to, and on TPU it is the
+      Pallas kernel family. The one exception is a plan that sorts at
+      *full width* (an OrderBy with ``topk_cap=None``): that is a
+      whole-segment-space sort, outside the bounded-tile contract of
+      the selection kernel, so it keeps the legacy lexsort path.
+    * ``use_pallas_join``: True only on TPU. On CPU the interpreted
+      Pallas probe is orders of magnitude slower than the sorted-hash
+      jnp probe at every cap size in the sweep.
+
+    ``REPRO_FORCE_JNP=1`` pins both knobs False — the operational
+    escape hatch (README): every operator falls back to the pure-jnp
+    reference implementations.
+
+    Pure function of (plan, cfg, environment); never mutates ``cfg``
+    (configs are shared cache keys in the service layer)."""
+    if os.environ.get("REPRO_FORCE_JNP") == "1":
+        return dataclasses.replace(cfg, use_pallas_segments=False,
+                                   use_pallas_join=False)
+    seg, join = cfg.use_pallas_segments, cfg.use_pallas_join
+    if join is None:
+        join = jax.default_backend() == "tpu"
+    if seg is None:
+        full_width_sort = cfg.topk_cap is None and any(
+            isinstance(op, A.OrderBy) for op in A.walk(plan))
+        seg = not full_width_sort
+    if seg == cfg.use_pallas_segments and join == cfg.use_pallas_join:
+        return cfg
+    return dataclasses.replace(cfg, use_pallas_segments=seg,
+                               use_pallas_join=join)
 
 
 @dataclasses.dataclass
@@ -206,6 +255,44 @@ def hash_join_probe(build_keys: tuple[jnp.ndarray, ...],
     return pos, matched, bucket_overflow
 
 
+# dense-compare segment mapping beats searchsorted's per-row scan up
+# to roughly this many dictionary slots (kernels benchmark sweep)
+SEG_COMPARE_CAP_MAX = 256
+
+
+def _sorted_distinct(x: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Smallest ``k`` distinct values of ``x`` below int32-max,
+    ascending, padded with int32-max — exactly
+    ``jnp.unique(x, size=k, fill_value=int32max)`` when int32-max
+    marks invalid entries, but scatter-free: one sort, then a
+    cumsum-rank compaction via searchsorted (XLA CPU lowers
+    ``jnp.unique``'s scatter to a serial while-loop; this form stays
+    vectorized)."""
+    big = jnp.int32(np.iinfo(np.int32).max)
+    xs = jnp.sort(x)
+    isnew = jnp.concatenate(
+        [jnp.ones((1,), bool), xs[1:] != xs[:-1]]) & (xs < big)
+    rank = jnp.cumsum(isnew.astype(I32))      # 1-based, steps at news
+    idx = jnp.searchsorted(rank, jnp.arange(1, k + 1, dtype=I32))
+    vals = jnp.take(xs, jnp.clip(idx, 0, xs.shape[0] - 1))
+    return jnp.where(jnp.arange(k) < rank[-1], vals, big)
+
+
+def _capped_uniques(masked_sid: jnp.ndarray, k: int,
+                    comm: Comm) -> jnp.ndarray:
+    """Globally-consistent smallest ``k`` distinct sids (invalid rows
+    pre-masked to int32-max), big-padded — the capped group
+    dictionary. Compacts *per partition first* (the global smallest k
+    distinct values are each among some partition's smallest k
+    distinct, so the union of per-partition prefixes covers them),
+    then all-gathers only [P, k] instead of [P, N] and compacts the
+    merged prefix. Bit-identical to ``jnp.unique`` over the full
+    gather with ``size=k, fill_value=int32max``."""
+    local = _sorted_distinct(masked_sid, k)
+    gathered = comm.all_gather(local)
+    return _sorted_distinct(gathered.reshape(-1), k)
+
+
 def _exchange(keys: tuple, valid, cols: dict, comm: Comm,
               dest) -> tuple[tuple, Any, dict]:
     """Partition exchange. ``dest=None``: broadcast (all_gather, the
@@ -305,7 +392,7 @@ class Executor:
         changes the compiled artifact, so profile variants cache
         separately from serving variants and the warm path never
         carries the cost."""
-        cfg = config or self.config
+        cfg = resolve_kernel_policy(plan, config or self.config)
         self.compile_count += 1
         schema: dict[int, tuple] = {}
         prof_meta: Optional[dict] = {} if profile else None
@@ -549,24 +636,47 @@ class Executor:
         A (cap+1)-th distinct key raises ``overflow_group_cap`` so the
         service regrows exactly this capacity; at cap >= dictionary
         size the full-dictionary layout is used, where overflow is
-        impossible by construction (the regrowth ceiling)."""
+        impossible by construction (the regrowth ceiling).
+
+        Two bit-identical implementations, chosen by the resolved
+        ``use_pallas_segments`` knob. The fused path builds the capped
+        dictionary scatter-free (``_capped_uniques``), maps sids to
+        segments by dense compare (small caps) or searchsorted, and
+        runs ONE ``kernels.ops.segmented_aggregate`` pass producing
+        count/sum/min/max for every value column together — no
+        scatters, no ``jnp.unique``, so XLA CPU never serializes it
+        into while-loops, and on TPU it is the Pallas segment kernel.
+        Both paths read the same ``group_cap`` and raise the same
+        ``overflow_group_cap`` flag: the knob changes implementation,
+        never capacity semantics (core.analysis.capflow's contract)."""
         t = self._eval(op.child, ev, comm, nts_input, ctx)
         key = ev.eval(op.key_expr, t.cols)
         sid = ev.atom_sid(key)
         dict_size = len(self.db.strings)
         valid = t.valid & (sid >= 0)
         cap = ctx.cfg.group_cap
+        fused = bool(ctx.cfg.use_pallas_segments)
         if cap is not None and cap < dict_size:
             # capped segment space: dense dynamic key dictionary
             nseg = cap
             big = jnp.int32(np.iinfo(np.int32).max)
-            gathered = comm.all_gather(jnp.where(valid, sid, big))
-            uniq = jnp.unique(gathered.reshape(-1), size=cap + 1,
-                              fill_value=big)
+            masked = jnp.where(valid, sid, big)
+            if fused:
+                uniq = _capped_uniques(masked, cap + 1, comm)
+            else:
+                gathered = comm.all_gather(masked)
+                uniq = jnp.unique(gathered.reshape(-1), size=cap + 1,
+                                  fill_value=big)
             govf = uniq[cap] < big      # a (cap+1)-th distinct key
             seg_keys = uniq[:cap]       # sorted ascending, big-padded
-            seg = jnp.clip(jnp.searchsorted(seg_keys, sid), 0,
-                           cap - 1).astype(I32)
+            if fused and cap <= SEG_COMPARE_CAP_MAX:
+                # == searchsorted-left over the sorted dictionary, as
+                # a dense compare (no per-row binary-search scan)
+                seg = jnp.sum(sid[:, None] > seg_keys[None, :],
+                              axis=1, dtype=I32)
+            else:
+                seg = jnp.searchsorted(seg_keys, sid).astype(I32)
+            seg = jnp.clip(seg, 0, cap - 1)
             valid = valid & (jnp.take(seg_keys, seg) == sid)
             key_col = jnp.where(seg_keys == big, jnp.int32(-1),
                                 seg_keys)
@@ -577,19 +687,70 @@ class Executor:
             govf = jnp.zeros((), jnp.bool_)
             key_col = jnp.arange(nseg, dtype=I32)
         ctx.note("overflow_group_cap", govf)
+        cols, g_counts = (
+            self._group_aggs_fused(op, ev, t, comm, seg, valid, nseg,
+                                   key_col)
+            if fused else
+            self._group_aggs_legacy(op, ev, t, comm, seg, valid, nseg,
+                                    key_col))
+        central = comm.index() == 0
+        out_valid = (g_counts > 0) & central
+        return Tile(cols, out_valid, t.overflow | govf)
+
+    def _group_aggs_fused(self, op, ev, t, comm, seg, valid, nseg,
+                          key_col):
+        """One fused segmented pass for every aggregate column: stack
+        the value columns [N, C], run ``kernels.ops.segmented_aggregate``
+        once (count/sum/min/max together), then the usual global step
+        (psum for counts/sums, pmin/pmax for extrema). Bit-identical to
+        the legacy per-aggregate scatter path: sums accumulate in the
+        same row order (one-hot dot_general), min/max are order-exact."""
+        from repro.kernels import ops as kops
+        specs = []                       # (var, fn, value column idx)
+        vcols = []
+        for var, fn, val_e in op.aggs:
+            if fn == "count":
+                specs.append((var, fn, -1))
+                continue
+            if fn not in ("sum", "avg", "min", "max"):
+                raise PlanError(f"group-by aggregate {fn}")
+            v = ev.atom_num(ev.eval(val_e, t.cols))
+            specs.append((var, fn, len(vcols)))
+            vcols.append(v)
+        n = seg.shape[0]
+        if vcols:
+            vals = jnp.stack(vcols, axis=1)
+            # NaN-valued rows are excluded from every aggregate value
+            # (count still counts them: avg = sum(non-NaN)/count(valid))
+            oks = valid[:, None] & ~jnp.isnan(vals)
+        else:
+            vals = jnp.zeros((n, 0), F32)
+            oks = jnp.zeros((n, 0), jnp.bool_)
+        counts, sums, mins, maxs = kops.segmented_aggregate(
+            vals, oks, seg, valid, nseg)
+        g_counts = comm.psum(counts)
+        cols: dict[int, Col] = {op.key_var: Col("str", key_col)}
+        for var, fn, j in specs:
+            if fn == "count":
+                cols[var] = Col("num", g_counts)
+            elif fn in ("sum", "avg"):
+                g = comm.psum(sums[:, j])
+                if fn == "avg":
+                    g = g / jnp.maximum(g_counts, 1.0)
+                cols[var] = Col("num", g)
+            elif fn == "min":
+                cols[var] = Col("num", comm.pmin(mins[:, j]))
+            else:
+                cols[var] = Col("num", comm.pmax(maxs[:, j]))
+        return cols, g_counts
+
+    def _group_aggs_legacy(self, op, ev, t, comm, seg, valid, nseg,
+                           key_col):
+        """Per-aggregate scatter-add/scatter-min path — the jnp
+        reference the fused path must match bitwise."""
+        from repro.kernels import ref as kref
 
         def seg_sum_count(vals):
-            if ctx.cfg.use_pallas_join:  # reuse the kernel toggle
-                from repro.kernels import ops as kops
-                n = vals.shape[0]
-                bn = n
-                for c in (512, 256, 128, 64, 32, 16, 8, 4, 2, 1):
-                    if n % c == 0:
-                        bn = c
-                        break
-                return kops.segmented_sum_count(vals, seg, valid, nseg,
-                                                block_n=bn)
-            from repro.kernels import ref as kref
             return kref.segmented_sum_count(vals, seg, valid, nseg)
 
         ones = jnp.ones(seg.shape, F32)
@@ -623,9 +784,7 @@ class Executor:
                 cols[var] = Col("num", g)
             else:
                 raise PlanError(f"group-by aggregate {fn}")
-        central = comm.index() == 0
-        out_valid = (g_counts > 0) & central
-        return Tile(cols, out_valid, t.overflow | govf)
+        return cols, g_counts
 
     def _eval_orderby(self, op: "A.OrderBy", ev, comm, nts_input,
                       ctx: EvalCtx, limit: Optional[int]) -> Tile:
@@ -654,8 +813,11 @@ class Executor:
             else:
                 key = ev.atom_num(col)
             sort_keys.append((key, desc))
+        fused = bool(ctx.cfg.use_pallas_segments) \
+            and ctx.cfg.topk_cap is not None
         idx, valid, ovf = topk_rows(sort_keys, t.valid,
-                                    ctx.cfg.topk_cap, limit)
+                                    ctx.cfg.topk_cap, limit,
+                                    fused=fused)
         ctx.note("overflow_topk_cap", ovf)
 
         def take(c: Col) -> Col:

@@ -427,19 +427,28 @@ def estimate_topk_cap(db: xdm.Database, tag: str,
 def rows_from_mask(mask: jnp.ndarray, cap: int
                    ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """mask [N] -> (idx [cap], valid [cap], overflow). Row order is
-    node-table order == document order (rule 4.1.1's free sort)."""
+    node-table order == document order (rule 4.1.1's free sort).
+
+    Compaction is prefix-count + binary search, not
+    ``jnp.nonzero(size=...)``: the j-th output slot is the first
+    position whose running set-bit count reaches j+1. Bit-identical
+    indices, but scatter-free — XLA CPU lowers the nonzero scatter to
+    a serial while loop that dominated every query's warm latency
+    (the ordered-suite pushdown regression)."""
     n = mask.shape[0]
     cap = min(cap, n)
-    (idx,) = jnp.nonzero(mask, size=cap, fill_value=n)
-    valid = idx < n
+    pos = jnp.cumsum(mask.astype(I32))
+    total = pos[-1]
+    idx = jnp.searchsorted(pos, jnp.arange(1, cap + 1, dtype=I32))
+    valid = jnp.arange(cap) < total
     idx = jnp.where(valid, idx, NEG)
-    overflow = jnp.sum(mask) > cap
+    overflow = total > cap
     return idx.astype(I32), valid, overflow
 
 
 def topk_rows(sort_keys: list[tuple[jnp.ndarray, bool]],
               valid: jnp.ndarray, cap: Optional[int],
-              limit: Optional[int]
+              limit: Optional[int], fused: bool = False
               ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Capacity-bounded segmented sort: the ORDER BY / top-k core.
 
@@ -453,7 +462,13 @@ def topk_rows(sort_keys: list[tuple[jnp.ndarray, bool]],
     hold every row the query needs — min(#valid, limit) — so a
     top-k pushdown (cap ~ k) never materializes the full segment
     space, and a too-small cap surfaces on its own regrowth flag
-    instead of silently truncating the ranking."""
+    instead of silently truncating the ranking.
+
+    ``fused=True`` routes the selection through the segment top-k
+    kernel entry point (kernels.ops.segment_topk — Pallas on TPU, its
+    bit-identical jnp twin on CPU); the operand stack handed over is
+    exactly the one ``jnp.lexsort`` consumes here, so the two routes
+    agree index-for-index."""
     n = valid.shape[0]
     cap = n if cap is None else min(int(cap), n)
     ops = []
@@ -463,9 +478,14 @@ def topk_rows(sort_keys: list[tuple[jnp.ndarray, bool]],
         zero = jnp.zeros((), key.dtype)
         k = jnp.where(valid, key, zero)   # invalid rows: inert keys
         ops.append(-k if desc else k)
-    # lexsort: LAST operand is primary — invalid-sinking flag first
-    order = jnp.lexsort(tuple(reversed(ops)) + ((~valid).astype(I32),))
-    idx = order[:cap].astype(I32)
+    flag = (~valid).astype(I32)
+    if fused:
+        from repro.kernels import ops as kops
+        idx = kops.segment_topk((flag,) + tuple(ops), cap)
+    else:
+        # lexsort: LAST operand is primary — invalid-sinking flag first
+        order = jnp.lexsort(tuple(reversed(ops)) + (flag,))
+        idx = order[:cap].astype(I32)
     out_valid = jnp.take(valid, idx)
     if limit is not None:
         out_valid = out_valid & (jnp.arange(cap) < limit)

@@ -96,28 +96,45 @@ flow analysis, overflow-registry agreement — before anything traces,
 annotated runtime profile (per-op rows, cap utilization, compile/
 execute split — core/obs/profile.py) on the prepared, batched AND
 scheduled paths, and the query's serving stages emit tracer spans /
-registry metrics when a ``Tracer`` is attached):
+registry metrics when a ``Tracer`` is attached,
+"kernel" = which Pallas kernel family the query's hot operator can
+route through when the resolved kernel policy picks the kernel path —
+``join`` = the blocked equi-join probe (kernels/hash_join.py),
+``seg`` = the fused segment aggregate + top-k selection family
+(kernels/seg_aggregate.py / seg_topk.py); "—" = pure scan/scalar
+shapes with no kernel-backed operator):
 
-  =====  ==========================  ====  =====  =====  =====  =====  =====  ===
-  query  shape                       prep  batch  sched  order  windw  verif  obs
-  =====  ==========================  ====  =====  =====  =====  =====  =====  ===
-  Q1     scan + 4-predicate filter   yes   yes    yes    —      —      yes    yes
-  Q2     scan + value filter         yes   yes    yes    —      —      yes    yes
-  Q3     scalar agg (sum div)        yes   yes    yes    —      —      yes    yes
-  Q4     scalar agg (max div)        yes   yes    yes    —      —      yes    yes
-  Q5     hash join + quantifier      yes   yes    yes    —      —      yes    yes
-  Q6     hash join, 3-col rows       yes   yes    yes    —      —      yes    yes
-  Q7     join + scalar agg           yes   yes    yes    —      —      yes    yes
-  Q8     self-join + scalar agg      yes   yes    yes    —      —      yes    yes
-  Q9     keyed group-by aggs         yes   yes    yes    yes    —      yes    yes
-  Q10    group-by + HAVING filter    yes   yes    yes    yes    —      yes    yes
-  Q11    group-by + order-by + k     yes   yes    yes    yes    —      yes    yes
-  Q12    windowed grouped slice      yes   yes    yes    yes    yes    yes    yes
-  =====  ==========================  ====  =====  =====  =====  =====  =====  ===
+  =====  ==========================  ====  =====  =====  =====  =====  =====  ===  ========
+  query  shape                       prep  batch  sched  order  windw  verif  obs  kernel
+  =====  ==========================  ====  =====  =====  =====  =====  =====  ===  ========
+  Q1     scan + 4-predicate filter   yes   yes    yes    —      —      yes    yes  —
+  Q2     scan + value filter         yes   yes    yes    —      —      yes    yes  —
+  Q3     scalar agg (sum div)        yes   yes    yes    —      —      yes    yes  —
+  Q4     scalar agg (max div)        yes   yes    yes    —      —      yes    yes  —
+  Q5     hash join + quantifier      yes   yes    yes    —      —      yes    yes  join
+  Q6     hash join, 3-col rows       yes   yes    yes    —      —      yes    yes  join
+  Q7     join + scalar agg           yes   yes    yes    —      —      yes    yes  join
+  Q8     self-join + scalar agg      yes   yes    yes    —      —      yes    yes  join
+  Q9     keyed group-by aggs         yes   yes    yes    yes    —      yes    yes  seg
+  Q10    group-by + HAVING filter    yes   yes    yes    yes    —      yes    yes  seg
+  Q11    group-by + order-by + k     yes   yes    yes    yes    —      yes    yes  seg
+  Q12    windowed grouped slice      yes   yes    yes    yes    yes    yes    yes  seg
+  =====  ==========================  ====  =====  =====  =====  =====  =====  ===  ========
 
 (Q9/Q10 are "ordered: yes" in the sense that adding ``order by`` /
 ``limit`` clauses to their templates lowers and serves; Q9's ``avg``
 and Q10's HAVING make them non-mergeable for windowed streaming.)
+
+Kernel-policy defaults are *measured*, per backend, and resolved at
+compile time by ``executor.resolve_kernel_policy``: the fused segment
+engine serves group-by/top-k by default everywhere (scatter-free on
+CPU, Pallas on TPU; full-width sorts — ``pushdown_topk=False`` with
+no LIMIT cap — keep the legacy sort path), while the blocked join
+probe defaults on only where it wins (TPU; the jnp sorted-hash probe
+wins under CPU vmap — see the "kernels" benchmark suite, which gates
+the defaults against fresh measurements). ``REPRO_FORCE_JNP=1`` is
+the escape hatch: it pins every kernel entry point to its jnp
+reference twin, bit-identical by construction, regardless of config.
 """
 from __future__ import annotations
 

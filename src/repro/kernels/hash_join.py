@@ -64,11 +64,23 @@ def block_join_probe(build_keys: tuple[jax.Array, ...],
     build order wins (build keys unique in the paper's queries)."""
     nkeys = len(build_keys)
     assert nkeys == len(probe_keys) and 1 <= nkeys <= 2
-    np_ = probe_keys[0].shape[0]
-    nb = build_keys[0].shape[0]
-    bp = min(block_p, np_)
-    bb = min(block_b, nb)
-    assert np_ % bp == 0 and nb % bb == 0, (np_, bp, nb, bb)
+    n_out = probe_keys[0].shape[0]
+    bp = min(block_p, n_out)
+    bb = min(block_b, build_keys[0].shape[0])
+    # serving-path capacities are arbitrary (statistics-presized, then
+    # doubled on regrowth) — round both sides up to the block grid with
+    # invalid rows; padded build rows never match, padded probe rows
+    # are sliced off the result
+    np_ = -(-n_out // bp) * bp
+    nb = -(-build_keys[0].shape[0] // bb) * bb
+    if np_ != n_out:
+        probe_keys = tuple(jnp.pad(k, (0, np_ - n_out))
+                           for k in probe_keys)
+        probe_valid = jnp.pad(probe_valid, (0, np_ - n_out))
+    if nb != build_keys[0].shape[0]:
+        pad = nb - build_keys[0].shape[0]
+        build_keys = tuple(jnp.pad(k, (0, pad)) for k in build_keys)
+        build_valid = jnp.pad(build_valid, (0, pad))
     kernel = functools.partial(_kernel, nkeys=nkeys, bb=bb, nb=nb // bb)
     probe_specs = [pl.BlockSpec((bp,), lambda i, j: (i,))
                    for _ in range(nkeys)]
@@ -87,4 +99,5 @@ def block_join_probe(build_keys: tuple[jax.Array, ...],
     )(*[k.astype(jnp.int32) for k in probe_keys],
       *[k.astype(jnp.int32) for k in build_keys],
       probe_valid, build_valid)
+    pos = pos[:n_out]
     return pos, pos >= 0

@@ -41,6 +41,87 @@ def _kernel(vals_ref, seg_ref, valid_ref, sum_ref, cnt_ref, *,
     cnt_ref[...] += jnp.sum(oh, axis=0)
 
 
+def _agg_kernel(vals_ref, ok_ref, seg_ref, valid_ref,
+                cnt_ref, sum_ref, min_ref, max_ref, *,
+                num_segments: int, bn: int, nc: int):
+    """Fused multi-column segment aggregation: one pass over the row
+    blocks accumulates count/sum/min/max for every value column at
+    once — no per-aggregate rescan, no full-width intermediate."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+        sum_ref[...] = jnp.zeros_like(sum_ref)
+        min_ref[...] = jnp.full_like(min_ref, jnp.inf)
+        max_ref[...] = jnp.full_like(max_ref, -jnp.inf)
+
+    seg = seg_ref[...]
+    vld = valid_ref[...] & (seg >= 0) & (seg < num_segments)
+    seg_ids = jax.lax.broadcasted_iota(jnp.int32, (bn, num_segments), 1)
+    oh = (seg_ids == seg[:, None]) & vld[:, None]          # (bn, S)
+    ohf = oh.astype(jnp.float32)
+    cnt_ref[...] += jnp.sum(ohf, axis=0)
+    v = vals_ref[...].astype(jnp.float32)                  # (bn, C)
+    okm = ok_ref[...] & vld[:, None]                       # (bn, C)
+    # sums via one-hot matmul — the same row-order accumulation as the
+    # executor's scatter-add reference, so float bits agree
+    sum_ref[...] += jax.lax.dot_general(
+        ohf, jnp.where(okm, v, 0.0), (((0,), (0,)), ((), ())))
+    for c in range(nc):   # static unroll; min/max are order-exact
+        m = oh & okm[:, c][:, None]                        # (bn, S)
+        vc = v[:, c][:, None]
+        min_ref[:, c] = jnp.minimum(
+            min_ref[:, c], jnp.min(jnp.where(m, vc, jnp.inf), axis=0))
+        max_ref[:, c] = jnp.maximum(
+            max_ref[:, c], jnp.max(jnp.where(m, vc, -jnp.inf), axis=0))
+
+
+def segmented_aggregate(values: jax.Array, ok: jax.Array,
+                        segments: jax.Array, valid: jax.Array,
+                        num_segments: int, *, block_n: int = 512,
+                        interpret: bool = False
+                        ) -> tuple[jax.Array, jax.Array, jax.Array,
+                                   jax.Array]:
+    """values/ok: [N, C]; segments/valid: [N]. Returns
+    (counts [S], sums [S, C], mins [S, C], maxs [S, C]).
+
+    ``valid`` masks rows out of the segment space entirely (counts
+    included); ``ok`` additionally masks per-column values (NaN
+    exclusion) out of sum/min/max while the row still counts. Empty
+    (segment, column) slots read +/-inf in mins/maxs — callers mask
+    on counts. jnp twin: kernels.ref.segmented_aggregate."""
+    n, nc = values.shape
+    bn = min(block_n, n)
+    assert n % bn == 0, (n, bn)
+    kernel = functools.partial(_agg_kernel, num_segments=num_segments,
+                               bn=bn, nc=nc)
+    s = num_segments
+    return pl.pallas_call(
+        kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, nc), lambda i: (i, 0)),
+            pl.BlockSpec((bn, nc), lambda i: (i, 0)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((s,), lambda i: (0,)),
+            pl.BlockSpec((s, nc), lambda i: (0, 0)),
+            pl.BlockSpec((s, nc), lambda i: (0, 0)),
+            pl.BlockSpec((s, nc), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((s,), jnp.float32),
+            jax.ShapeDtypeStruct((s, nc), jnp.float32),
+            jax.ShapeDtypeStruct((s, nc), jnp.float32),
+            jax.ShapeDtypeStruct((s, nc), jnp.float32),
+        ],
+        interpret=interpret,
+    )(values, ok, segments.astype(jnp.int32), valid)
+
+
 def segmented_sum_count(values: jax.Array, segments: jax.Array,
                         valid: jax.Array, num_segments: int, *,
                         block_n: int = 512, interpret: bool = False

@@ -268,6 +268,30 @@ def test_cross_validate_flags_undersized_cap(svc):
 def test_registry_completeness():
     # analysis-side cap->flag map literally equals the executor's
     assert capflow.registry_coverage() == executor.OVERFLOW_FLAGS
+
+
+def test_capflow_invariant_under_kernel_policy(weather_db_small):
+    """The kernel knobs pick an implementation (Pallas kernel vs jnp
+    twin), never capacity semantics: for every query, the kernel-path
+    and jnp-path compilations derive the identical capacity-site set
+    — same caps, same flags, same operator paths, same static bounds.
+    The fused kernels read the same resolved caps and raise the same
+    OVERFLOW_FLAGS entries, so regrowth ladders are path-independent."""
+    kern = service.QueryService(
+        weather_db_small,
+        executor.ExecConfig(use_pallas_segments=True,
+                            use_pallas_join=True))
+    plain = service.QueryService(
+        weather_db_small,
+        executor.ExecConfig(use_pallas_segments=False,
+                            use_pallas_join=False))
+    for name in queries.ALL:
+        fk = capflow.analyze(kern.prepare(queries.ALL[name]).plan,
+                             db=weather_db_small)
+        fj = capflow.analyze(plain.prepare(queries.ALL[name]).plan,
+                             db=weather_db_small)
+        assert fk.sites == fj.sites, name
+        assert fk.caps and fk.flags, name
     fields = {f.name for f in dataclasses.fields(executor.ExecConfig)}
     for cap in executor.OVERFLOW_FLAGS:
         assert cap in fields
@@ -385,6 +409,7 @@ def test_lint_waiver_suppresses():
 def test_lint_repo_is_clean():
     findings = lint.lint_paths([str(ROOT / "src" / "repro")])
     findings += lint.lint_registry(str(ROOT / "src"))
+    findings += lint.lint_kernel_registry(str(ROOT / "src"))
     assert findings == [], "\n".join(str(f) for f in findings)
 
 
@@ -400,3 +425,39 @@ def test_lint_registry_catches_orphan_flag(tmp_path):
     assert "CAP002" in codes       # flag never ctx.note()d
     assert "CAP003" in codes       # no regrowth rung
     assert "CAP004" in codes       # never presized
+
+
+def test_lint_kernel_registry_catches_unreferenced_kernel(tmp_path):
+    # an unregistered pallas entry point, a registry value naming no
+    # ref.py function, and a stale key all flag as KRN001
+    kdir = tmp_path / "repro" / "kernels"
+    kdir.mkdir(parents=True)
+    (kdir / "mykern.py").write_text(
+        "def my_kernel(x):\n"
+        "    return pl.pallas_call(lambda r: r)(x)\n"
+        "def registered_kernel(x):\n"
+        "    return pl.pallas_call(lambda r: r)(x)\n"
+        "def bad_ref_kernel(x):\n"
+        "    return pl.pallas_call(lambda r: r)(x)\n"
+        "def helper(x):\n"
+        "    return x\n")
+    (kdir / "ref.py").write_text(
+        "def registered_ref(x):\n"
+        "    return x\n")
+    (kdir / "registry.py").write_text(
+        'KERNEL_REFS: dict = {\n'
+        '    "mykern.registered_kernel": "registered_ref",\n'
+        '    "mykern.gone_kernel": "registered_ref",\n'
+        '    "mykern.bad_ref_kernel": "no_such_ref",\n'
+        '}\n')
+    msgs = [f.message for f in
+            lint.lint_kernel_registry(str(tmp_path))]
+    assert any("mykern.my_kernel" in m and "no jnp reference" in m
+               for m in msgs)
+    assert any("mykern.gone_kernel" in m and "stale" in m
+               for m in msgs)
+    assert any("no_such_ref" in m for m in msgs)
+    # helper has no pallas_call and registered_kernel is declared —
+    # neither flags
+    assert not any("helper" in m or "registered_kernel" in m
+                   for m in msgs)

@@ -28,14 +28,24 @@ is driven through a seeded grid of constant bindings and checked for
      the prepared, batched and scheduled paths — rows() comparisons
      are list comparisons, so every parity above is already
      order-sensitive; this parity pins the pushdown itself.
+  7. pallas-vs-jnp join probe: every join query served with
+     ``use_pallas_join=True`` (the interpreted TPU kernel on CPU)
+     must equal the sorted-hash jnp probe bit for bit, across the
+     prepared, batched and scheduled paths AND through the tiny-cap
+     regrowth ladder.
+  8. fused-vs-legacy segment engine: grouped and ordered queries with
+     ``use_pallas_segments`` pinned False (the pre-fusion scatter
+     path) must equal the default resolved-fused service bit for bit.
 
 The unmarked fast subset keeps the default loop quick; the full
 >=20-case grid per query is slow-marked (scripts/ci.sh --differential
 runs the fast slice standalone)."""
+import dataclasses
+
 import pytest
 
 from repro.core import ExecConfig, Executor, QueryService, compile_query
-from repro.core.queries import ALL
+from repro.core.queries import ALL, GROUPED, JOINS, ORDERED
 from repro.core.workload import variant_grid
 
 STATIONS = ["GHCND:USW00012836", "GHCND:USW00014771",
@@ -168,6 +178,99 @@ def test_differential_ordered_fast(services, fullsort, name):
 def test_differential_ordered_full_grid(services, fullsort, name):
     texts = _run_ordered_grid(services, fullsort, name, FULL_N)
     assert len(texts) >= 20
+
+
+# -- parity 7: pallas join kernel vs sorted-hash jnp probe -------------
+
+
+@pytest.fixture(scope="module")
+def pallas_join_services(weather_db):
+    """The kernel side of parity 7: identical services with the join
+    probe pinned to the Pallas block kernel (interpreted on CPU — the
+    exact TPU kernel body). The jnp side is the default ``services``
+    fixture (CPU resolves use_pallas_join=False)."""
+    cfg = ExecConfig(use_pallas_join=True)
+    return {
+        "prepared": QueryService(weather_db, cfg),
+        "batch": QueryService(weather_db, cfg),
+        "tiny": QueryService(
+            weather_db, dataclasses.replace(TINY, use_pallas_join=True),
+            presize=False),
+        "sched": QueryService(weather_db, cfg),
+    }
+
+
+def _run_join_parity(services, pallas_join_services, name, n):
+    texts = grid(name, n)
+    jnp_side = [services["prepared"].execute(t) for t in texts]
+    pal = pallas_join_services
+    for t, j in zip(texts, jnp_side):
+        p = pal["prepared"].execute(t)
+        assert not p.overflow
+        assert p.rows() == j.rows(), (name, t)
+    for j, b in zip(jnp_side, pal["batch"].execute_batch(texts)):
+        assert j.rows() == b.rows(), name
+    # the regrowth ladder rides the kernel probe too (the exact block
+    # probe never raises bucket overflow; join_cap/scan regrowth must
+    # still converge to the identical result)
+    for t, j in zip(texts, jnp_side):
+        small = pal["tiny"].execute(t)
+        assert not small.overflow
+        assert small.rows() == j.rows(), (name, t)
+    sched = pal["sched"]
+    tickets = [sched.submit(t, tenant="AB"[i % 2])
+               for i, t in enumerate(texts)]
+    sched.drain()
+    for j, tk in zip(jnp_side, tickets):
+        assert tk.error is None, (name, tk.error)
+        assert j.rows() == tk.result.rows(), name
+    return texts
+
+
+@pytest.mark.parametrize("name", list(JOINS))
+def test_differential_pallas_join_fast(services, pallas_join_services,
+                                       name):
+    _run_join_parity(services, pallas_join_services, name, FAST_N)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", list(JOINS))
+def test_differential_pallas_join_full_grid(services,
+                                            pallas_join_services, name):
+    texts = _run_join_parity(services, pallas_join_services, name,
+                             FULL_N)
+    assert len(texts) >= 20
+
+
+# -- parity 8: fused segment engine vs the legacy scatter path ---------
+
+
+@pytest.fixture(scope="module")
+def legacy_segments(weather_db):
+    """use_pallas_segments pinned False: the pre-fusion per-aggregate
+    scatter path with jnp.unique dictionary builds."""
+    return QueryService(weather_db,
+                        ExecConfig(use_pallas_segments=False))
+
+
+@pytest.mark.parametrize("name", sorted(set(GROUPED) | set(ORDERED)))
+def test_differential_segment_engine_fast(services, legacy_segments,
+                                          name):
+    for t in grid(name, FAST_N):
+        fused = services["prepared"].execute(t)
+        legacy = legacy_segments.execute(t)
+        assert fused.rows() == legacy.rows(), (name, t)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", sorted(set(GROUPED) | set(ORDERED)))
+def test_differential_segment_engine_full_grid(services,
+                                               legacy_segments, name):
+    texts = grid(name, FULL_N)
+    assert len(texts) >= 20
+    for t in texts:
+        assert services["prepared"].execute(t).rows() == \
+            legacy_segments.execute(t).rows(), (name, t)
 
 
 @pytest.mark.slow
