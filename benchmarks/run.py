@@ -21,8 +21,10 @@ SUITES = {
     "ordered": ["serving_ordered"],
     "multitenant": ["serving_multitenant"],
     "obs": ["serving_obs"],
+    "capacity": ["serving_capacity"],
     "serving": ["serving", "serving_groupby", "serving_ordered",
-                "serving_multitenant", "serving_obs"],
+                "serving_multitenant", "serving_obs",
+                "serving_capacity"],
 }
 
 
@@ -90,6 +92,10 @@ def main() -> None:
             smoke=args.quick,
             out_path=("BENCH_serving_smoke.json" if args.quick
                       else "BENCH_serving.json")),
+        "serving_capacity":
+            lambda: serving_benchmarks.serving_capacity(
+                variants=8 if args.quick else 64,
+                smoke=args.quick),
         "ingest": q_benchmarks.ingest,
         "lm_train": lm_benchmarks.train_step_smoke,
         "lm_attention": lm_benchmarks.attention_impls,

@@ -29,6 +29,12 @@
 #                                 profile unit+property tests plus the
 #                                 zero-cost-when-off benchmark gate
 #                                 and trace_event export validation)
+#   scripts/ci.sh --capacity      also run the capacity-observatory
+#                                 smoke stage standalone (flight
+#                                 recorder / cost model / deviceless
+#                                 simulator tests plus the tiny-trace
+#                                 3-load-point sweep with its fidelity
+#                                 and round-trip gates)
 #   scripts/ci.sh --kernels       also run the kernel stage standalone:
 #                                 the segment-engine parity suite under
 #                                 REPRO_KERNEL_INTERPRET=1 (the Pallas
@@ -53,14 +59,17 @@ SCHEDULER=0
 PROPERTIES=0
 OBS=0
 KERNELS=0
+CAPACITY=0
 while [ "${1:-}" = "--differential" ] || [ "${1:-}" = "--scheduler" ] \
         || [ "${1:-}" = "--properties" ] || [ "${1:-}" = "--obs" ] \
-        || [ "${1:-}" = "--kernels" ] || [ "${1:-}" = "--lint" ]; do
+        || [ "${1:-}" = "--kernels" ] || [ "${1:-}" = "--capacity" ] \
+        || [ "${1:-}" = "--lint" ]; do
     if [ "$1" = "--differential" ]; then DIFFERENTIAL=1; fi
     if [ "$1" = "--scheduler" ]; then SCHEDULER=1; fi
     if [ "$1" = "--properties" ]; then PROPERTIES=1; fi
     if [ "$1" = "--obs" ]; then OBS=1; fi
     if [ "$1" = "--kernels" ]; then KERNELS=1; fi
+    if [ "$1" = "--capacity" ]; then CAPACITY=1; fi
     if [ "$1" = "--lint" ]; then
         python -m repro.core.analysis.lint src/repro
         python -m repro.core.analysis.verify
@@ -97,4 +106,8 @@ fi
 if [ "$OBS" = "1" ]; then
     python -m pytest -x -q tests/test_obs.py
     python -m benchmarks.serving_benchmarks --smoke --suite obs
+fi
+if [ "$CAPACITY" = "1" ]; then
+    python -m pytest -x -q tests/test_capacity.py
+    python -m benchmarks.serving_benchmarks --smoke --suite capacity
 fi

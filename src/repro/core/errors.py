@@ -88,3 +88,12 @@ class CapFlowError(QueryError):
 class RewriteSoundnessError(QueryError):
     """A rewrite rule changed plan semantics (analysis/check.py)."""
     stage = "rewrite-soundness"
+
+
+class TraceFormatError(QueryError, ValueError):
+    """A flight-recorder trace failed schema validation
+    (obs/recorder.py): unknown format/version, malformed JSON line, or
+    a missing/ill-typed event field.  ``text`` is the offending trace
+    line, so ``str(err)`` carets into the record like every other
+    stage's diagnostic."""
+    stage = "trace-format"

@@ -1,22 +1,29 @@
 """Observability layer: span tracer (dual wall/virtual clocks, Chrome
-trace export), metrics registry (Prometheus text + JSONL sink), and
-per-query operator profiles. Host-only — nothing here runs inside
-jitted code, and the NULL_TRACER default keeps the warm path at its
-pre-instrumentation cost. No jax at import time."""
+trace export), metrics registry (Prometheus text + JSONL sink),
+per-query operator profiles, the workload flight recorder, and the
+calibrated dispatch cost model the capacity simulator replays
+against. Host-only — nothing here runs inside jitted code, and the
+NULL_TRACER default keeps the warm path at its pre-instrumentation
+cost. No jax at import time."""
+from repro.core.obs.costmodel import (CostModel, fit_cost_model)
 from repro.core.obs.metrics import (Counter, EventSink, Gauge,
                                     Histogram, MetricsRegistry,
                                     REGISTERED_STATS, stats_diff,
                                     stats_snapshot)
 from repro.core.obs.profile import (OpProfile, QueryProfile,
                                     build_profile)
+from repro.core.obs.recorder import (FlightRecorder, FlightTrace,
+                                     load_trace, load_trace_file)
 from repro.core.obs.trace import (NULL_TRACER, Span, Tracer, current,
                                   sig_digest, using,
                                   validate_trace_events)
 
 __all__ = [
+    "CostModel", "fit_cost_model",
     "Counter", "EventSink", "Gauge", "Histogram", "MetricsRegistry",
     "REGISTERED_STATS", "stats_diff", "stats_snapshot",
     "OpProfile", "QueryProfile", "build_profile",
+    "FlightRecorder", "FlightTrace", "load_trace", "load_trace_file",
     "NULL_TRACER", "Span", "Tracer", "current", "sig_digest",
     "using", "validate_trace_events",
 ]

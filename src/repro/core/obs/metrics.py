@@ -60,6 +60,10 @@ REGISTERED_STATS = {
     "slo_misses": "slo_misses_total",
     "slo_misses_by_tenant": ("slo_misses_tenant_total", "tenant"),
     "slo_miss_causes": ("slo_misses_cause_total", "cause"),
+    # gauges — names without the ``_total`` suffix export with TYPE
+    # gauge (instantaneous occupancy, sampled each scheduler sweep)
+    "queue_depth": "queue_depth",
+    "sched_backlog": "sched_backlog",
 }
 
 
@@ -308,7 +312,11 @@ class MetricsRegistry:
             lines.append(f"# TYPE {name} {kind}")
 
         for name, labels, value in self._bound_samples():
-            header(name, "counter")
+            # naming convention carries the type: counters end
+            # ``_total``; everything else bound from stats fields is
+            # an instantaneous gauge
+            header(name, "counter" if name.endswith("_total")
+                   else "gauge")
             lines.append(f"{name}{self._render_labels(labels)} "
                          f"{self._render_value(value)}")
         for name, m in self._metrics.items():

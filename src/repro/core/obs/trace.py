@@ -109,7 +109,7 @@ class Span:
         if tr.clock is not None:
             self.vt0 = tr.clock.now()
         tr._stack.append(self.sid)
-        tr.records.append(self)
+        tr._record(self)
         return self
 
     def __exit__(self, et, ev, tb):
@@ -142,17 +142,44 @@ class _NullSpan:
 NULL_SPAN = _NullSpan()
 
 
+#: default ``Tracer`` record bound — generous (a full 64-variant
+#: benchmark pass emits a few thousand records), but finite, so
+#: long-running serving with tracing on has bounded host memory.
+DEFAULT_MAX_EVENTS = 262144
+
+
 class Tracer:
     """Collects spans + instant events. ``enabled=False`` keeps the
     object attachable but makes every emit a no-op (the benchmarked
-    "tracing disabled" configuration)."""
+    "tracing disabled" configuration).
 
-    def __init__(self, clock=None, enabled: bool = True):
+    ``max_events`` bounds ``records``: when the bound is exceeded the
+    oldest half is evicted in one slice (amortized O(1) per record,
+    and ``records`` stays a plain list so exports and tests index it
+    directly). Evictions accumulate in ``dropped`` — surfaced as the
+    ``tracer_dropped_events`` gauge in the metrics registry, because a
+    trace that silently lost its head reads as a shorter run, not a
+    truncated one. ``None`` means unlimited (the historical
+    behaviour)."""
+
+    def __init__(self, clock=None, enabled: bool = True,
+                 max_events: Optional[int] = DEFAULT_MAX_EVENTS):
+        assert max_events is None or max_events >= 2, max_events
         self.enabled = enabled
         self.clock = clock          # VirtualClock or None
+        self.max_events = max_events
+        self.dropped = 0
         self.records: list[Span] = []
         self._stack: list[int] = []
         self._seq = 0
+
+    def _record(self, s: "Span") -> None:
+        self.records.append(s)
+        if (self.max_events is not None
+                and len(self.records) > self.max_events):
+            cut = max(1, self.max_events // 2)
+            self.dropped += cut
+            del self.records[:cut]
 
     # -- binding ----------------------------------------------------------
 
@@ -180,7 +207,7 @@ class Tracer:
         s.wall0 = s.wall1 = time.perf_counter()  # lint: allow(DET001)
         if self.clock is not None:
             s.vt0 = s.vt1 = self.clock.now()
-        self.records.append(s)
+        self._record(s)
 
     # -- export -----------------------------------------------------------
 
@@ -246,6 +273,7 @@ class Tracer:
         self.records.clear()
         self._stack.clear()
         self._seq = 0
+        self.dropped = 0
 
 
 class _NullTracer(Tracer):

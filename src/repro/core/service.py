@@ -97,6 +97,11 @@ annotated runtime profile (per-op rows, cap utilization, compile/
 execute split — core/obs/profile.py) on the prepared, batched AND
 scheduled paths, and the query's serving stages emit tracer spans /
 registry metrics when a ``Tracer`` is attached,
+"sim" = the query's admitted traffic is capturable by the flight
+recorder (obs/recorder.py) and devicelessly replayable by the
+discrete-event capacity simulator (serving/simulate.py): its erased
+signature groups batches identically live and simulated, so offered-
+load sweeps predict its p50/p99 without a device,
 "kernel" = which Pallas kernel family the query's hot operator can
 route through when the resolved kernel policy picks the kernel path —
 ``join`` = the blocked equi-join probe (kernels/hash_join.py),
@@ -104,22 +109,22 @@ route through when the resolved kernel policy picks the kernel path —
 (kernels/seg_aggregate.py / seg_topk.py); "—" = pure scan/scalar
 shapes with no kernel-backed operator):
 
-  =====  ==========================  ====  =====  =====  =====  =====  =====  ===  ========
-  query  shape                       prep  batch  sched  order  windw  verif  obs  kernel
-  =====  ==========================  ====  =====  =====  =====  =====  =====  ===  ========
-  Q1     scan + 4-predicate filter   yes   yes    yes    —      —      yes    yes  —
-  Q2     scan + value filter         yes   yes    yes    —      —      yes    yes  —
-  Q3     scalar agg (sum div)        yes   yes    yes    —      —      yes    yes  —
-  Q4     scalar agg (max div)        yes   yes    yes    —      —      yes    yes  —
-  Q5     hash join + quantifier      yes   yes    yes    —      —      yes    yes  join
-  Q6     hash join, 3-col rows       yes   yes    yes    —      —      yes    yes  join
-  Q7     join + scalar agg           yes   yes    yes    —      —      yes    yes  join
-  Q8     self-join + scalar agg      yes   yes    yes    —      —      yes    yes  join
-  Q9     keyed group-by aggs         yes   yes    yes    yes    —      yes    yes  seg
-  Q10    group-by + HAVING filter    yes   yes    yes    yes    —      yes    yes  seg
-  Q11    group-by + order-by + k     yes   yes    yes    yes    —      yes    yes  seg
-  Q12    windowed grouped slice      yes   yes    yes    yes    yes    yes    yes  seg
-  =====  ==========================  ====  =====  =====  =====  =====  =====  ===  ========
+  =====  ==========================  ====  =====  =====  =====  =====  =====  ===  ===  ========
+  query  shape                       prep  batch  sched  order  windw  verif  obs  sim  kernel
+  =====  ==========================  ====  =====  =====  =====  =====  =====  ===  ===  ========
+  Q1     scan + 4-predicate filter   yes   yes    yes    —      —      yes    yes  yes  —
+  Q2     scan + value filter         yes   yes    yes    —      —      yes    yes  yes  —
+  Q3     scalar agg (sum div)        yes   yes    yes    —      —      yes    yes  yes  —
+  Q4     scalar agg (max div)        yes   yes    yes    —      —      yes    yes  yes  —
+  Q5     hash join + quantifier      yes   yes    yes    —      —      yes    yes  yes  join
+  Q6     hash join, 3-col rows       yes   yes    yes    —      —      yes    yes  yes  join
+  Q7     join + scalar agg           yes   yes    yes    —      —      yes    yes  yes  join
+  Q8     self-join + scalar agg      yes   yes    yes    —      —      yes    yes  yes  join
+  Q9     keyed group-by aggs         yes   yes    yes    yes    —      yes    yes  yes  seg
+  Q10    group-by + HAVING filter    yes   yes    yes    yes    —      yes    yes  yes  seg
+  Q11    group-by + order-by + k     yes   yes    yes    yes    —      yes    yes  yes  seg
+  Q12    windowed grouped slice      yes   yes    yes    yes    yes    yes    yes  yes  seg
+  =====  ==========================  ====  =====  =====  =====  =====  =====  ===  ===  ========
 
 (Q9/Q10 are "ordered: yes" in the sense that adding ``order by`` /
 ``limit`` clauses to their templates lowers and serves; Q9's ``avg``
@@ -255,6 +260,12 @@ class QueryService:
         self.tracer = tracer if tracer is not None else NULL_TRACER
         self.metrics = MetricsRegistry()
         self.metrics.register_stats("service", self.stats)
+        # tracer ring evictions surface as a lazy gauge: a bounded
+        # trace that lost records must read as truncated, not short
+        self.metrics.gauge(
+            "tracer_dropped_events",
+            help="trace records evicted by the Tracer max_events ring",
+            fn=lambda: getattr(self.tracer, "dropped", 0))
         # per-signature observability history feeding explain():
         # compile count/wall seconds and regrowth (cap, old, new)
         # events. Only cold paths (compile, regrow) write here.
@@ -815,18 +826,21 @@ class QueryService:
     def submit(self, query: Query, bindings: Optional[Sequence] = None,
                *, tenant: str = "default", at: Optional[float] = None,
                slo: Optional[float] = None,
-               stream: Optional[str] = None):
+               stream: Optional[str] = None,
+               template: Optional[str] = None):
         """Asynchronously admit one request into the serving runtime
         (created with defaults on first use). Returns a ``Ticket``
         whose ``result`` is filled by ``drain()``. ``at`` is the
         request's virtual arrival time; ``tenant`` feeds cross-tenant
         fairness; ``stream`` folds the request's grouped result into
         the named windowed stream (serving/window.py) as one window's
-        partial."""
+        partial; ``template`` names the workload template (Q1..Q12)
+        for the flight recorder, when one is attached."""
         if self._runtime is None:
             self.runtime()
         return self._runtime.submit(query, bindings, tenant=tenant,
-                                    at=at, slo=slo, stream=stream)
+                                    at=at, slo=slo, stream=stream,
+                                    template=template)
 
     def stream_result(self, name: str) -> list:
         """Finalized grouped rows of a windowed stream accumulated via

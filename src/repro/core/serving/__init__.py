@@ -21,6 +21,10 @@ runtime that keeps devices saturated across concurrent query
                 partial group states (count/sum/min/max) merged
                 associatively across batches, merge-order invariant
                 by construction
+  simulate.py   deviceless discrete-event replay of recorded or
+                synthetic traces through the same admission/DRR/
+                bucketing code, charging a calibrated cost model
+                instead of dispatching — capacity curves in seconds
 """
 from repro.core.serving.bucketing import (CostBasedBucketing,  # noqa: F401
                                           Pow2Bucketing, next_pow2)
@@ -28,5 +32,8 @@ from repro.core.serving.queue import (AdmissionQueue, Ticket,  # noqa: F401
                                       VirtualClock)
 from repro.core.serving.scheduler import (FairScheduler,  # noqa: F401
                                           RuntimeStats, ServingRuntime)
+from repro.core.serving.simulate import (SimEvent, SimReport,  # noqa: F401
+                                         Simulation, events_from_trace,
+                                         events_from_traffic, simulate)
 from repro.core.serving.window import (GroupSpec,  # noqa: F401
                                        WindowedGroupState, group_spec_of)

@@ -55,7 +55,10 @@ class Ticket:
     ``result``/``error`` are filled by the scheduler at dispatch.
     ``stream`` names the windowed grouped stream this request's
     partial result folds into (serving/window.py), or None for
-    ordinary one-shot requests.
+    ordinary one-shot requests. ``template`` is the workload template
+    name the request was instantiated from (Q1..Q12), when known — the
+    flight recorder (obs/recorder.py) persists it so synthetic traces,
+    which speak in template names, can be joined against recorded ones.
     """
     seq: int
     tenant: str
@@ -67,6 +70,7 @@ class Ticket:
     error: Optional[Exception] = None
     completion: Optional[float] = None
     stream: Optional[str] = None
+    template: Optional[str] = None
     # filled when the ticket completes past its deadline: what the
     # completing dispatch paid for — "compile-on-path",
     # "regrowth-retry", or "queued-behind" (see RuntimeStats)

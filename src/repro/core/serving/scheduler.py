@@ -109,6 +109,12 @@ class RuntimeStats:
     # the same verdict in ``Ticket.slo_cause``.
     slo_misses_by_tenant: dict = dataclasses.field(default_factory=dict)
     slo_miss_causes: dict = dataclasses.field(default_factory=dict)
+    # gauges (instantaneous, not monotonic): tickets held in pending
+    # admission windows / in the scheduler's per-tenant FIFOs, sampled
+    # after every sweep — the capacity sweep plots queue growth
+    # against offered load from these
+    queue_depth: int = 0
+    sched_backlog: int = 0
 
     @property
     def padding_waste(self) -> float:
@@ -136,8 +142,12 @@ class ServingRuntime:
     def __init__(self, service, *, window: float = 1.0,
                  max_fill: int = 16, quantum: int = 4,
                  policy=None, clock: Optional[VirtualClock] = None,
-                 measure_service_time: bool = False):
+                 measure_service_time: bool = False,
+                 recorder=None):
         self.service = service
+        # optional flight recorder (obs/recorder.py): every admitted
+        # ticket is captured at submit() for deviceless replay
+        self.recorder = recorder
         self.clock = clock or VirtualClock()
         # observability: share the service's tracer; serving-stage
         # spans carry virtual timestamps once the clock is bound
@@ -176,6 +186,11 @@ class ServingRuntime:
         # the trace a CostBasedBucketing ladder can be fitted from
         # offline (benchmarks/serving_benchmarks.py)
         self.dispatch_log: list[tuple[str, int, int, int]] = []
+        # (sig digest, group_size, bucket, seconds, compiles) per
+        # dispatch, appended only under measure_service_time — the
+        # observations obs/costmodel.py fits dispatch service time
+        # from (compiles > 0 marks cold samples the warm fit excludes)
+        self.service_log: list[tuple[str, int, int, float, int]] = []
         # streaming-window grouped mode: stream name -> running merged
         # state (serving/window.py). Partials are absorbed as their
         # tickets complete — in whatever order batches dispatch — and
@@ -191,7 +206,8 @@ class ServingRuntime:
 
     def submit(self, query, bindings=None, *, tenant: str = "default",
                at: Optional[float] = None, slo: Optional[float] = None,
-               stream: Optional[str] = None) -> Ticket:
+               stream: Optional[str] = None,
+               template: Optional[str] = None) -> Ticket:
         """Admit one request. ``at`` is its virtual arrival time
         (advancing the clock — open-loop traffic submits in timestamp
         order); ``slo`` overrides the ticket's latency deadline
@@ -239,10 +255,12 @@ class ServingRuntime:
         # across drains
         t = Ticket(seq=self.stats.submitted, tenant=tenant, query=pq,
                    values=values, arrival=now, deadline=deadline,
-                   stream=stream)
+                   stream=stream, template=template)
         self._tickets.append(t)
         self.queue.submit(t)
         self.stats.submitted += 1
+        if self.recorder is not None:
+            self.recorder.record(t)
         # open-loop semantics: submitting IS the passage of time, so
         # windows whose deadline this arrival crossed dispatch now —
         # not at some eventual drain (which would inflate their
@@ -259,6 +277,7 @@ class ServingRuntime:
         self.scheduler.offer(self.queue.pop_due())
         picked = self.scheduler.select(budget)
         if not picked:
+            self._sample_gauges()
             return 0
         self.stats.steps += 1
         groups: "OrderedDict[str, list[Ticket]]" = OrderedDict()
@@ -267,7 +286,14 @@ class ServingRuntime:
         done = 0
         for sig, tickets in groups.items():
             done += self._dispatch(sig, tickets)
+        self._sample_gauges()
         return done
+
+    def _sample_gauges(self) -> None:
+        # instantaneous occupancy after a sweep; plain assignment, not
+        # accumulation, so re-sampling is idempotent
+        self.stats.queue_depth = len(self.queue)
+        self.stats.sched_backlog = self.scheduler.backlog()
 
     def _dispatch(self, sig: str, tickets: list[Ticket]) -> int:
         # install this runtime's tracer as the ambient one for the
@@ -290,6 +316,7 @@ class ServingRuntime:
         # opt-in latency measurement, never on the result path
         t0 = (time.perf_counter()  # lint: allow(DET001)
               if self.measure_service_time else 0.0)
+        bucket = len(tickets)       # scalar path: no padding
         with self.tracer.span("dispatch", cat="serving",
                               sig=sig_digest(sig),
                               requests=len(tickets)) as span:
@@ -326,8 +353,13 @@ class ServingRuntime:
                         t.error = e
                 span.set(error=type(e).__name__)
         if self.measure_service_time:
-            self.clock.advance(
-                time.perf_counter() - t0)  # lint: allow(DET001)
+            elapsed = time.perf_counter() - t0  # lint: allow(DET001)
+            self.clock.advance(elapsed)
+            # service-time observation for the cost model — compile
+            # count tags cold samples so the warm fit can exclude them
+            self.service_log.append(
+                (sig_digest(sig), len(tickets), bucket, elapsed,
+                 svc.stats.compiles - before.compiles))
         delta = svc.stats.diff(before)
         cause = ("compile-on-path" if delta.compiles > 0 else
                  "regrowth-retry" if delta.retries > 0 else

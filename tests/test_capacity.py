@@ -1,0 +1,304 @@
+"""Capacity-observatory tests: flight-recorder trace format (bounded
+ring, byte-identical round trip, caret-diagnostic schema rejection),
+the calibrated cost model (fit/predict/persist + calibration error),
+the deviceless discrete-event simulator (including live-vs-simulated
+fidelity on real served traffic), and the satellite observability
+bounds (Tracer ring, queue-depth/backlog gauges)."""
+import dataclasses
+import json
+import types
+
+import pytest
+
+from repro.core import QueryService
+from repro.core.errors import TraceFormatError
+from repro.core.obs.costmodel import CostModel, fit_cost_model
+from repro.core.obs.metrics import REGISTERED_STATS, MetricsRegistry
+from repro.core.obs.recorder import (FlightRecorder, TRACE_FORMAT,
+                                     load_trace)
+from repro.core.obs.trace import Tracer, validate_trace_events
+from repro.core.serving import Ticket
+from repro.core.serving.scheduler import RuntimeStats
+from repro.core.serving.simulate import (SimEvent, Simulation,
+                                         events_from_trace,
+                                         events_from_traffic, simulate)
+from repro.core.workload import DEFAULT_TENANTS, make_tenant_traffic
+
+STATIONS = ["GHCND:USW00012836", "GHCND:USW00014771",
+            "GHCND:USW90000002", "GHCND:USW90000003",
+            "GHCND:USW90000004"]
+YEARS = (1976, 1999, 2000, 2001, 2003, 2004)
+
+
+class _Sig:
+    signature = ("scan", "filter", ("param", "f32"))
+
+
+def _ticket(seq, tenant="a", arrival=0.0, slo=4.0, template="Q1"):
+    return Ticket(seq=seq, tenant=tenant, query=_Sig(), values=(seq,),
+                  arrival=arrival, deadline=arrival + slo,
+                  template=template)
+
+
+# -- flight recorder ---------------------------------------------------------
+
+
+def test_recorder_ring_bound_counts_drops():
+    rec = FlightRecorder(capacity=4)
+    for i in range(7):
+        rec.record(_ticket(i, arrival=float(i)))
+    assert len(rec) == 4 and rec.dropped == 3
+    # ring keeps the newest events
+    assert [e["seq"] for e in rec.events()] == [3, 4, 5, 6]
+    assert rec.trace().header["dropped"] == 3
+
+
+def test_trace_round_trip_byte_identical():
+    rec = FlightRecorder()
+    for i in range(5):
+        rec.record(_ticket(i, tenant="t%d" % (i % 2),
+                           arrival=0.25 * i, slo=4.0))
+    blob = rec.trace().dumps()
+    again = load_trace(blob)
+    assert again.dumps() == blob
+    assert again.header["format"] == TRACE_FORMAT
+    assert [e["seq"] for e in again.events] == list(range(5))
+    # slo recorded as deadline - arrival
+    assert all(e["slo"] == 4.0 for e in again.events)
+
+
+def test_trace_rejects_unknown_version_with_caret():
+    blob = FlightRecorder().trace().dumps()
+    bad = blob.replace('"version":1', '"version":7')
+    with pytest.raises(TraceFormatError) as ei:
+        load_trace(bad)
+    msg = str(ei.value)
+    assert "unknown schema version 7" in msg
+    # caret-style diagnostic anchored into the offending line
+    assert "^" in msg and "trace-format error" in msg
+
+
+def test_trace_rejects_missing_and_illtyped_fields():
+    rec = FlightRecorder()
+    rec.record(_ticket(0))
+    header, event = rec.trace().dumps().splitlines()
+    ev = json.loads(event)
+    del ev["tenant"]
+    with pytest.raises(TraceFormatError, match="missing required "
+                                               "field 'tenant'"):
+        load_trace(header + "\n" + json.dumps(ev) + "\n")
+    ev2 = json.loads(event)
+    ev2["arrival"] = "soon"
+    with pytest.raises(TraceFormatError, match="'arrival' has wrong "
+                                               "type str"):
+        load_trace(header + "\n" + json.dumps(ev2) + "\n")
+    with pytest.raises(TraceFormatError, match="not a repro.flight"):
+        load_trace('{"format":"something-else","version":1}\n')
+    with pytest.raises(TraceFormatError, match="not valid JSON"):
+        load_trace(header + "\n" + "{not json}\n")
+
+
+def test_recorder_chrome_export_validates():
+    rec = FlightRecorder()
+    for i in range(4):
+        rec.record(_ticket(i, arrival=0.5 * i))
+    events = rec.trace().chrome_events()
+    assert validate_trace_events(events) == []
+    # instants carry the virtual arrival in microseconds
+    assert events[1]["ts"] == 0.0 and events[2]["ts"] == 0.5e6
+
+
+# -- cost model --------------------------------------------------------------
+
+
+def _fake_runtime():
+    # (sig digest, size, bucket, seconds, compiles)
+    return types.SimpleNamespace(service_log=[
+        ("aa", 3, 4, 0.040, 1),      # cold: excluded from warm fit
+        ("aa", 3, 4, 0.010, 0),
+        ("aa", 4, 4, 0.014, 0),
+        ("aa", 7, 8, 0.020, 0),
+        ("bb", 2, 2, 0.002, 0),
+    ])
+
+
+def test_costmodel_fit_predict_and_fallbacks():
+    cm = fit_cost_model(_fake_runtime())
+    assert cm.predict("aa", 4) == pytest.approx(0.012)
+    assert cm.predict("aa", 8) == pytest.approx(0.020)
+    # unseen bucket: linear interpolation over observed buckets
+    assert 0.012 < cm.predict("aa", 6) < 0.020
+    # never negative even when extrapolating below the ladder
+    assert cm.predict("aa", 1) >= 0.0
+    # single-bucket signature: its own mean
+    assert cm.predict("bb", 16) == pytest.approx(0.002)
+    # unknown signature: global warm mean
+    assert cm.predict("zz", 4) == pytest.approx(cm.default_s)
+    # cold prediction prefers the observed cold mean
+    assert cm.predict_cold("aa", 4) == pytest.approx(0.040)
+    assert cm.samples == 5
+    assert 0.0 <= cm.calibration_error < 1.0
+
+
+def test_costmodel_json_round_trip_and_version_gate():
+    cm = fit_cost_model(_fake_runtime())
+    doc = cm.to_json()
+    cm2 = CostModel.from_json(doc)
+    assert cm2.to_json() == doc
+    assert cm2.predict("aa", 6) == pytest.approx(cm.predict("aa", 6))
+    assert len(cm2.residuals) == len(cm.residuals) == 4
+    with pytest.raises(ValueError, match="unknown cost-model version"):
+        CostModel.from_json(doc.replace('"version": 1', '"version": 9'))
+    with pytest.raises(ValueError, match="not a repro.cost-model"):
+        CostModel.from_json('{"format": "nope"}')
+
+
+# -- simulator ---------------------------------------------------------------
+
+
+def _uniform_events(n, gap, sig="s1", tenant_mod=2, slo=4.0):
+    return [SimEvent(arrival=i * gap, tenant="t%d" % (i % tenant_mod),
+                     sig=sig, slo=slo) for i in range(n)]
+
+
+def test_sim_zero_cost_latency_bounded_by_window():
+    # zero dispatch cost: latency is pure admission-window wait
+    rep = simulate(_uniform_events(64, 0.1), window=2.0, max_fill=16)
+    assert rep.stats.submitted == rep.stats.dispatched == 64
+    assert rep.stats.slo_misses == 0
+    assert rep.percentile(99) <= 2.0 + 1e-9
+
+
+def test_sim_is_deterministic():
+    evs = _uniform_events(200, 0.03)
+    cm = CostModel(service_s={"s1": {16: 0.05}}, default_s=0.01)
+    a = simulate(evs, window=1.0, max_fill=16, cost_model=cm)
+    b = simulate(evs, window=1.0, max_fill=16, cost_model=cm)
+    assert a.summary() == b.summary()
+    assert a.latencies() == b.latencies()
+
+
+def test_sim_saturation_knee_under_load():
+    # service demand 0.5 s/dispatch: compressing arrivals past the
+    # service rate must blow p99 through the SLO — the knee the
+    # capacity sweep detects
+    cm = CostModel(service_s={"s1": {1: 0.5, 16: 0.5}},
+                   default_s=0.5)
+    base = [(i * 1.0, "t%d" % (i % 2), "Q1", "ignored")
+            for i in range(64)]
+    p99 = {}
+    for load in (1.0, 64.0):
+        evs = events_from_traffic(base, {"Q1": "s1"}, slo=4.0,
+                                  load=load)
+        rep = simulate(evs, window=2.0, max_fill=4, cost_model=cm)
+        p99[load] = rep.percentile(99)
+    assert p99[64.0] > 4.0 > p99[1.0]
+
+
+def test_sim_first_touch_charges_cold():
+    cm = CostModel(service_s={"s1": {4: 0.01}}, cold_s={"s1": 9.0})
+    evs = [SimEvent(arrival=0.0, tenant="a", sig="s1", slo=1.0)
+           for _ in range(4)]
+    rep = simulate(evs, window=0.5, max_fill=4, cost_model=cm)
+    # the one dispatch was the (sig, bucket) pair's first: cold charge
+    # blows every deadline and is attributed to the compile
+    assert rep.stats.slo_misses == 4
+    assert rep.stats.slo_miss_causes == {"compile-on-path": 4}
+
+
+def test_sim_samples_queue_gauges():
+    sim = Simulation(window=2.0, max_fill=8)
+    for ev in _uniform_events(12, 0.01):
+        sim.submit(ev)
+    assert sim.stats.queue_depth == len(sim.queue) > 0
+    sim.drain()
+    assert sim.stats.queue_depth == 0 and sim.stats.sched_backlog == 0
+    assert max(q for _, q, _ in sim.queue_samples) > 0
+
+
+def test_sim_reproduces_live_virtual_latencies(weather_db):
+    """The tentpole fidelity property: a recorded live (pure-virtual)
+    multitenant run replays devicelessly to the SAME per-tenant
+    latency distribution — not just matching percentiles, matching
+    samples."""
+    traffic = make_tenant_traffic(DEFAULT_TENANTS, STATIONS, YEARS,
+                                  total=12, seed=3)
+    svc = QueryService(weather_db)
+    rec = FlightRecorder()
+    knobs = dict(window=2.0, max_fill=8, quantum=4)
+    rt = svc.runtime(policy="pow2", recorder=rec, **knobs)
+    for at, tenant, template, text in traffic:
+        rt.submit(text, tenant=tenant, at=at, template=template)
+    tickets = rt.drain()
+    assert all(t.error is None for t in tickets)
+    assert len(rec) == len(traffic)
+
+    trace = rec.trace()
+    assert load_trace(trace.dumps()).dumps() == trace.dumps()
+    # template names survive into the trace for sig joining
+    assert set(trace.template_signatures()) <= {
+        t for spec in DEFAULT_TENANTS for t, _w in spec.mix}
+
+    rep = simulate(events_from_trace(trace), policy="pow2", **knobs)
+    live: dict = {}
+    for t in tickets:
+        live.setdefault(t.tenant, []).append(t.latency)
+    assert set(live) == set(rep.latencies_by_tenant)
+    for tenant, lats in live.items():
+        assert sorted(lats) == pytest.approx(
+            rep.latencies_by_tenant[tenant], abs=1e-12)
+    # same batching decisions, not just same latencies
+    assert rep.stats.batches == rt.stats.batches
+    assert rep.stats.scalar_dispatches == rt.stats.scalar_dispatches
+    assert rep.stats.padded_slots == rt.stats.padded_slots
+
+
+# -- satellite: tracer bound -------------------------------------------------
+
+
+def test_tracer_max_events_ring():
+    tr = Tracer(max_events=8)
+    for _ in range(30):
+        tr.event("x", cat="host")
+    # stays a plain list (exports and tests index it), stays bounded,
+    # and nothing vanishes unaccounted
+    assert isinstance(tr.records, list)
+    assert len(tr.records) <= 9
+    assert tr.dropped + len(tr.records) == 30
+    assert tr.records[-1].name == "x"
+    tr.clear()
+    assert tr.records == [] and tr.dropped == 0
+
+
+def test_tracer_unbounded_when_none():
+    tr = Tracer(max_events=None)
+    for _ in range(30):
+        tr.event("x")
+    assert len(tr.records) == 30 and tr.dropped == 0
+
+
+def test_tracer_dropped_events_gauge(weather_db_small):
+    from repro.core.queries import ALL
+    svc = QueryService(weather_db_small, tracer=Tracer(max_events=4))
+    svc.execute(ALL["Q1"])
+    assert svc.tracer.dropped > 0
+    expo = svc.metrics.exposition()
+    assert "# TYPE tracer_dropped_events gauge" in expo
+    assert f"tracer_dropped_events {svc.tracer.dropped}" in expo
+
+
+# -- satellite: queue gauges registered --------------------------------------
+
+
+def test_runtime_gauges_registered_and_typed():
+    for f in dataclasses.fields(RuntimeStats):
+        assert f.name in REGISTERED_STATS, f.name
+    reg = MetricsRegistry()
+    st = RuntimeStats()
+    st.queue_depth, st.sched_backlog = 5, 2
+    reg.register_stats("runtime", st)
+    expo = reg.exposition()
+    assert "# TYPE runtime_queue_depth gauge" in expo
+    assert "# TYPE runtime_sched_backlog gauge" in expo
+    assert "runtime_queue_depth 5" in expo
+    assert "# TYPE runtime_submitted_total counter" in expo
