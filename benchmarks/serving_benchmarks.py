@@ -202,7 +202,8 @@ def _measure(db, wl, repeats: int, label: str, smoke: bool) -> dict:
     return results
 
 
-SECTIONS = ("groupby", "ordered", "multitenant", "obs", "kernels")
+SECTIONS = ("groupby", "ordered", "multitenant", "obs", "kernels",
+            "restart")
 
 
 def _merge_record(out_path: str, section, results: dict) -> None:
@@ -979,12 +980,161 @@ def serving_capacity(variants: int = 64, repeats: int = 3,
     return results
 
 
+def serving_restart(variants: int = 64, repeats: int = 3,
+                    out_path: str = "BENCH_serving.json",
+                    smoke: bool = False) -> dict:
+    """The restart suite, recorded under "restart": cold-restart-to-
+    first-byte with a warm persistent plan cache (core/persist.py) vs
+    an empty one, on the 64-variant Q1/Q2/Q3 workload.
+
+    One seeding service populates a disk cache (and records reference
+    rows). Then two fresh services simulate process restarts — valid
+    in-process because jit traces and executables live per closure,
+    so a new ``QueryService``/``Executor`` pays full trace+compile:
+
+      empty  — fresh service on an empty directory: construction +
+               first-request latency includes the XLA compile
+      warm   — fresh service on the seeded directory: the executable
+               deserializes from disk instead of compiling
+
+    A third restart measures the ``warmup(templates)`` boot path:
+    prewarm every template from disk, then serve with zero compiles.
+
+    Gates (BEFORE the json write, like every suite): the warm restart
+    must compile NOTHING (persist hits only), all three paths must
+    return bitwise the seeding run's rows, a mismatched-fingerprint
+    probe must invalidate rather than serve, and warm restart-to-
+    first-byte must be <= 0.5x the empty-restart's (0.8x in smoke,
+    where the tiny db makes compiles cheap and timing noisy).
+    ``repeats`` is accepted for suite-signature uniformity and
+    ignored (restarts are one-shot by nature)."""
+    import shutil
+    import tempfile
+
+    from repro.core import persist
+
+    del repeats
+    spec = SMOKE_SPEC if smoke else FULL_SPEC
+    db = build_database(spec, num_partitions=4)
+    stations = [spec.station_id(i) for i in range(spec.num_stations)]
+    wl = make_workload(stations, spec.years, total=variants)
+    queries = [q for _, q in wl]
+    templates = sorted({t for t, _ in wl})
+    label = "serving_restart"
+    root = tempfile.mkdtemp(prefix="repro-plancache-")
+    warm_dir = os.path.join(root, "warm")
+    empty_dir = os.path.join(root, "empty")
+    try:
+        # -- seed: populate the disk cache, record reference rows
+        svc_seed = QueryService(db, persist_dir=warm_dir)
+        t0 = time.perf_counter()
+        seed_rows = [svc_seed.execute(q).rows() for q in queries]
+        seed_s = time.perf_counter() - t0
+        info = svc_seed.persist_info()
+
+        def restart(persist_dir):
+            """Fresh service -> (ttfb, suite_seconds, rows, service).
+            TTFB spans construction through the first result — what a
+            restarted process's first caller waits."""
+            t0 = time.perf_counter()
+            svc = QueryService(db, persist_dir=persist_dir)
+            rows = [svc.execute(queries[0]).rows()]
+            ttfb = time.perf_counter() - t0
+            rows += [svc.execute(q).rows() for q in queries[1:]]
+            return ttfb, time.perf_counter() - t0, rows, svc
+
+        ttfb_e, suite_e, rows_e, svc_e = restart(empty_dir)
+        ttfb_w, suite_w, rows_w, svc_w = restart(warm_dir)
+
+        # -- warmup boot path on another fresh "process"
+        t0 = time.perf_counter()
+        svc_boot = QueryService(db, persist_dir=warm_dir)
+        boot = svc_boot.warmup(queries[:len(templates)])
+        warmup_s = time.perf_counter() - t0
+        rows_b = [svc_boot.execute(q).rows() for q in queries]
+
+        # -- a foreign fingerprint must invalidate, never serve
+        real = persist.env_fingerprint
+        persist.env_fingerprint = lambda: {**real(), "jax": "foreign"}
+        try:
+            svc_f = QueryService(db, persist_dir=warm_dir)
+            rows_f = [svc_f.execute(queries[0]).rows()]
+        finally:
+            persist.env_fingerprint = real
+
+        mismatches = [i for i, r in enumerate(seed_rows)
+                      if rows_e[i] != r or rows_w[i] != r
+                      or rows_b[i] != r]
+        if rows_f[0] != seed_rows[0]:
+            mismatches.append(0)
+        ratio = ttfb_w / ttfb_e
+        n = len(queries)
+        results = {
+            "variants": n,
+            "templates": templates,
+            "smoke": smoke,
+            "seed_suite_s": seed_s,
+            "seed_compiles": svc_seed.stats.compiles,
+            "persist_entries": info.entries,
+            "persist_bytes": info.bytes,
+            "restart_ttfb_s_empty": ttfb_e,
+            "restart_ttfb_s_warm": ttfb_w,
+            "restart_ttfb_ratio": ratio,
+            "restart_suite_s_empty": suite_e,
+            "restart_suite_s_warm": suite_w,
+            "restart_suite_ratio": suite_w / suite_e,
+            "restart_compiles_empty": svc_e.stats.compiles,
+            "restart_compiles_warm": svc_w.stats.compiles,
+            "restart_persist_hits_warm": svc_w.stats.persist_hits,
+            "warmup_boot_s": warmup_s,
+            "warmup_compiles": boot["compiles"],
+            "warmup_persist_hits": boot["persist_hits"],
+            "warmup_serve_compiles": svc_boot.stats.compiles,
+            "foreign_fingerprint_invalidations":
+                svc_f.stats.persist_invalidations,
+            "foreign_fingerprint_hits": svc_f.stats.persist_hits,
+            "result_mismatches": len(mismatches),
+        }
+        for k, v in results.items():
+            if isinstance(v, (int, float)):
+                row(label, f"{n}var", k, float(v))
+
+        # gates BEFORE the json write, so a regressed run never
+        # overwrites the committed good record
+        if svc_w.stats.compiles or boot["compiles"] \
+                or svc_boot.stats.compiles:
+            raise RuntimeError(
+                f"warm-cache restart recompiled: "
+                f"{svc_w.stats.compiles} serving / "
+                f"{svc_boot.stats.compiles} warmup-boot compiles for "
+                f"{len(templates)} persisted templates")
+        if mismatches:
+            raise RuntimeError(
+                f"restarted results drifted from the seeding run at "
+                f"variant indices {sorted(set(mismatches))[:8]}")
+        if svc_f.stats.persist_hits:
+            raise RuntimeError(
+                "a mismatched environment fingerprint was SERVED "
+                "from the persistent cache — never acceptable")
+        limit = 0.8 if smoke else 0.5
+        if ratio > limit:
+            raise RuntimeError(
+                f"warm-cache restart-to-first-byte is {ratio:.2f}x "
+                f"the empty-cache restart (> {limit}x): persistence "
+                f"is not paying for itself")
+        _merge_record(out_path, "restart", results)
+        return results
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
 SUITES = {"scan_join": serving, "groupby": serving_groupby,
           "ordered": serving_ordered,
           "multitenant": serving_multitenant,
           "obs": serving_obs,
           "kernels": serving_kernels,
-          "capacity": serving_capacity}
+          "capacity": serving_capacity,
+          "restart": serving_restart}
 
 
 def main() -> None:

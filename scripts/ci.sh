@@ -41,6 +41,14 @@
 #                                 interpreter executes the exact TPU
 #                                 kernel bodies on CPU) plus the vmapped
 #                                 kernel-vs-jnp policy sweep smoke
+#   scripts/ci.sh --persist       also run the persistent-plan-cache
+#                                 stage standalone (disk cache round
+#                                 trip, restart parity, corruption and
+#                                 fingerprint degradation, warmup API,
+#                                 eviction counters — plus the 4-variant
+#                                 cold-restart benchmark gate; the
+#                                 restart suite also rides the default
+#                                 loop's `--suite all` smoke pass)
 #   scripts/ci.sh --lint          run ONLY the static stage: the
 #                                 tracing-hazard/determinism linter
 #                                 (file:line findings, nonzero exit)
@@ -60,16 +68,18 @@ PROPERTIES=0
 OBS=0
 KERNELS=0
 CAPACITY=0
+PERSIST=0
 while [ "${1:-}" = "--differential" ] || [ "${1:-}" = "--scheduler" ] \
         || [ "${1:-}" = "--properties" ] || [ "${1:-}" = "--obs" ] \
         || [ "${1:-}" = "--kernels" ] || [ "${1:-}" = "--capacity" ] \
-        || [ "${1:-}" = "--lint" ]; do
+        || [ "${1:-}" = "--persist" ] || [ "${1:-}" = "--lint" ]; do
     if [ "$1" = "--differential" ]; then DIFFERENTIAL=1; fi
     if [ "$1" = "--scheduler" ]; then SCHEDULER=1; fi
     if [ "$1" = "--properties" ]; then PROPERTIES=1; fi
     if [ "$1" = "--obs" ]; then OBS=1; fi
     if [ "$1" = "--kernels" ]; then KERNELS=1; fi
     if [ "$1" = "--capacity" ]; then CAPACITY=1; fi
+    if [ "$1" = "--persist" ]; then PERSIST=1; fi
     if [ "$1" = "--lint" ]; then
         python -m repro.core.analysis.lint src/repro
         python -m repro.core.analysis.verify
@@ -110,4 +120,8 @@ fi
 if [ "$CAPACITY" = "1" ]; then
     python -m pytest -x -q tests/test_capacity.py
     python -m benchmarks.serving_benchmarks --smoke --suite capacity
+fi
+if [ "$PERSIST" = "1" ]; then
+    python -m pytest -x -q tests/test_persist.py
+    python -m benchmarks.serving_benchmarks --smoke --suite restart
 fi

@@ -5,7 +5,9 @@ algebra + rewrite (Algebricks), physical/executor (Hyracks -> SPMD
 JAX over the mesh ``data`` axis). See DESIGN.md.
 """
 from repro.core import algebra, xdm  # noqa: F401
+from repro.core.errors import InvalidArgumentError  # noqa: F401
 from repro.core.executor import ExecConfig, Executor, ResultSet  # noqa: F401
+from repro.core.persist import PlanDiskCache  # noqa: F401
 from repro.core.prepared import (ParamSpec, PreparedQuery,  # noqa: F401
                                  bind_params, lift_params, prepare_plan)
 from repro.core.rewrite import optimize  # noqa: F401

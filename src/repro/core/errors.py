@@ -75,6 +75,15 @@ class UnsupportedError(TranslateError, NotImplementedError):
     stage = "translate"
 
 
+class InvalidArgumentError(QueryError, ValueError):
+    """A user-facing API argument is out of its documented domain
+    (service constructor knobs, ``stack_params`` widths, warmup
+    templates).  Replaces bare ``assert`` at validation sites — an
+    assert disappears under ``python -O``, silently admitting the
+    invalid value instead of diagnosing it."""
+    stage = "config"
+
+
 class PlanTypeError(QueryError, TypeError):
     """Schema/type inference rejection (analysis/schema.py)."""
     stage = "typecheck"

@@ -133,6 +133,21 @@ def resolve_kernel_policy(plan: A.Op, cfg: ExecConfig) -> ExecConfig:
                                use_pallas_join=join)
 
 
+def example_params(param_specs: tuple,
+                   batch: Optional[int] = None) -> tuple:
+    """Canonical example arguments for AOT lowering, one per spec:
+    the exact avals ``prepared.bind_params`` (scalar) and
+    ``prepared.stack_params`` (batched, [B]-leading) produce at
+    serving time — f32[] for "num", i32[] for "str"/"date" — so an
+    ahead-of-time compiled executable accepts every real binding."""
+    out = []
+    for spec in param_specs:
+        dt = np.float32 if spec.typ == "num" else np.int32
+        out.append(np.zeros((batch,), dt) if batch is not None
+                   else dt(0))
+    return tuple(out)
+
+
 @dataclasses.dataclass
 class EvalCtx:
     """Per-trace evaluation context: the active config plus per-stage
@@ -365,7 +380,8 @@ class Executor:
                 config: Optional[ExecConfig] = None,
                 param_specs: tuple = (),
                 batch: Optional[int] = None,
-                profile: bool = False) -> "CompiledPlan":
+                profile: bool = False,
+                aot: bool = False) -> "CompiledPlan":
         """Returns a CompiledPlan whose fn maps tables -> raw arrays
         (stacked over partitions); static column schema is captured at
         trace time (strings can't flow through vmap/shard_map).
@@ -391,7 +407,17 @@ class Executor:
         ``QueryService.explain(profile=True)``. The extra reduction
         changes the compiled artifact, so profile variants cache
         separately from serving variants and the warm path never
-        carries the cost."""
+        carries the cost.
+
+        ``aot=True`` lowers and compiles ahead of time against the
+        executor's own tables plus canonical example parameters
+        (``example_params``), returning a ``jax.stages.Compiled`` in
+        ``CompiledPlan.fn`` instead of a lazily-traced jitted
+        wrapper. Same call convention and results (``bind_params``
+        produces exactly the example argument avals), but the
+        executable is concrete — which is what the persistent plan
+        cache (core/persist.py) serializes. Ignored for donated
+        compilations (one-shot by contract, nothing to persist)."""
         cfg = resolve_kernel_policy(plan, config or self.config)
         self.compile_count += 1
         schema: dict[int, tuple] = {}
@@ -427,7 +453,10 @@ class Executor:
             else:
                 fn = jax.vmap(local, in_axes=(self._table_slice_axes(),),
                               axis_name=axis)
-            return CompiledPlan(jit(fn), schema, plan, cfg, mode,
+            out_fn = jit(fn)
+            if aot and not donate:
+                out_fn = self._aot_compile(out_fn, param_specs, batch)
+            return CompiledPlan(out_fn, schema, plan, cfg, mode,
                                 donated=donate, param_specs=param_specs,
                                 batch=batch, profile_meta=prof_meta)
         if mode == "spmd":
@@ -469,10 +498,26 @@ class Executor:
             out_spec = P(None, axis) if batch is not None else P(axis)
             sm = shard_map(local_spmd, mesh=mesh, in_specs=in_specs,
                            out_specs=out_spec, check_rep=False)
-            return CompiledPlan(jit(sm), schema, plan, cfg, mode,
+            out_fn = jit(sm)
+            if aot and not donate:
+                out_fn = self._aot_compile(out_fn, param_specs, batch)
+            return CompiledPlan(out_fn, schema, plan, cfg, mode,
                                 donated=donate, param_specs=param_specs,
                                 batch=batch, profile_meta=prof_meta)
         raise ValueError(mode)
+
+    def _aot_compile(self, jitted, param_specs: tuple,
+                     batch: Optional[int]):
+        """jitted wrapper -> ``jax.stages.Compiled`` via lower+compile
+        with the bound tables and canonical example parameters. One
+        trace either way; AOT just makes the executable a first-class
+        value (serializable by core/persist.py) instead of a cache
+        entry inside jit."""
+        if param_specs:
+            return jitted.lower(self.tables,
+                                example_params(param_specs,
+                                               batch)).compile()
+        return jitted.lower(self.tables).compile()
 
     def run(self, plan: A.Op, mode: str = "sim", mesh=None,
             config: Optional[ExecConfig] = None) -> "ResultSet":

@@ -49,6 +49,16 @@ REGISTERED_STATS = {
     "batches": "batches_total",
     "batched_requests": "batched_requests_total",
     "overflows_by_cap": ("overflows_total", "cap"),
+    # persistent compiled-plan cache (core/persist.py via service.py)
+    "persist_hits": "persist_hits_total",
+    "persist_misses": "persist_misses_total",
+    "persist_invalidations": "persist_invalidations_total",
+    "persist_stores": "persist_stores_total",
+    # per-cache eviction attribution: every LRU-bounded map in the
+    # service (plans, profile plans, bindings, good configs, signature
+    # histories, row costs, persisted files) counts its own evictions
+    # — "evictions" above stays the level-1 total for compatibility
+    "evictions_by_cache": ("cache_evictions_total", "cache"),
     # RuntimeStats (core/serving/scheduler.py)
     "submitted": "submitted_total",
     "dispatched": "dispatched_total",

@@ -46,6 +46,7 @@ import numpy as np
 
 from repro.core import algebra as A
 from repro.core import xdm
+from repro.core.errors import InvalidArgumentError
 from repro.core.obs import trace as obs_trace
 
 # Literals appearing directly under these calls are runtime values, not
@@ -266,8 +267,17 @@ def bind_params(db: xdm.Database, specs: Sequence[ParamSpec],
 def stack_params(bindings: Sequence[tuple], pad_to: int) -> tuple:
     """Stack B bound parameter tuples into [pad_to]-leading arrays for
     one batched dispatch; the pad rows repeat the last binding (their
-    results are discarded, never returned)."""
-    assert bindings and pad_to >= len(bindings)
+    results are discarded, never returned). Typed validation, not
+    ``assert`` — these are user-facing batch widths and must diagnose
+    under ``python -O`` too."""
+    if not bindings:
+        raise InvalidArgumentError(
+            "stack_params needs at least one binding")
+    if pad_to < len(bindings):
+        raise InvalidArgumentError(
+            f"pad_to={pad_to} is smaller than the batch "
+            f"({len(bindings)} bindings) — the padded width must "
+            f"cover every request")
     padded = list(bindings) + [bindings[-1]] * (pad_to - len(bindings))
     return tuple(np.stack([b[i] for b in padded])
                  for i in range(len(bindings[0])))

@@ -78,6 +78,19 @@ to the ROADMAP's million-user north star — needs more, all here:
    segment space (``pushdown_topk=False`` restores full-sort-then-
    slice — the "ordered" benchmark's ablation baseline).
 
+6. **Restart survival.** With ``persist_dir`` set, every serving
+   compilation is ahead-of-time (a concrete ``jax.stages.Compiled``)
+   and its executable is serialized to a fingerprint-checked disk
+   cache (core/persist.py); a restarted service on the same directory
+   — or an explicit boot-time ``warmup(templates)`` — reloads its
+   workload's executables instead of re-tracing them, cutting
+   cold-restart-to-first-byte by the compile share of the cold path
+   (the "restart" benchmark suite gates this). A mismatched
+   environment (jax version, backend, device, kernel-policy env,
+   partitioning, database dictionaries) invalidates entries instead
+   of serving them; corrupt or torn files degrade to a normal
+   compile.
+
 Serving tier query coverage (core/queries.py; "preparable" = literals
 lift into a shared parameterized plan, "batchable" = stacked-parameter
 batched dispatch through ``execute_batch`` — since the serving runtime
@@ -107,24 +120,29 @@ route through when the resolved kernel policy picks the kernel path —
 ``join`` = the blocked equi-join probe (kernels/hash_join.py),
 ``seg`` = the fused segment aggregate + top-k selection family
 (kernels/seg_aggregate.py / seg_topk.py); "—" = pure scan/scalar
-shapes with no kernel-backed operator):
+shapes with no kernel-backed operator,
+"persist" = the template's compiled serving variants (scalar and
+batched) serialize into the disk-backed persistent plan cache
+(core/persist.py) when ``persist_dir`` is set, and a restarted
+service — or ``warmup()`` at boot — reloads them with zero
+recompiles, fingerprint-checked and bit-identical):
 
-  =====  ==========================  ====  =====  =====  =====  =====  =====  ===  ===  ========
-  query  shape                       prep  batch  sched  order  windw  verif  obs  sim  kernel
-  =====  ==========================  ====  =====  =====  =====  =====  =====  ===  ===  ========
-  Q1     scan + 4-predicate filter   yes   yes    yes    —      —      yes    yes  yes  —
-  Q2     scan + value filter         yes   yes    yes    —      —      yes    yes  yes  —
-  Q3     scalar agg (sum div)        yes   yes    yes    —      —      yes    yes  yes  —
-  Q4     scalar agg (max div)        yes   yes    yes    —      —      yes    yes  yes  —
-  Q5     hash join + quantifier      yes   yes    yes    —      —      yes    yes  yes  join
-  Q6     hash join, 3-col rows       yes   yes    yes    —      —      yes    yes  yes  join
-  Q7     join + scalar agg           yes   yes    yes    —      —      yes    yes  yes  join
-  Q8     self-join + scalar agg      yes   yes    yes    —      —      yes    yes  yes  join
-  Q9     keyed group-by aggs         yes   yes    yes    yes    —      yes    yes  yes  seg
-  Q10    group-by + HAVING filter    yes   yes    yes    yes    —      yes    yes  yes  seg
-  Q11    group-by + order-by + k     yes   yes    yes    yes    —      yes    yes  yes  seg
-  Q12    windowed grouped slice      yes   yes    yes    yes    yes    yes    yes  yes  seg
-  =====  ==========================  ====  =====  =====  =====  =====  =====  ===  ===  ========
+  =====  ==========================  ====  =====  =====  =====  =====  =====  ===  ===  ======  =======
+  query  shape                       prep  batch  sched  order  windw  verif  obs  sim  kernel  persist
+  =====  ==========================  ====  =====  =====  =====  =====  =====  ===  ===  ======  =======
+  Q1     scan + 4-predicate filter   yes   yes    yes    —      —      yes    yes  yes  —       yes
+  Q2     scan + value filter         yes   yes    yes    —      —      yes    yes  yes  —       yes
+  Q3     scalar agg (sum div)        yes   yes    yes    —      —      yes    yes  yes  —       yes
+  Q4     scalar agg (max div)        yes   yes    yes    —      —      yes    yes  yes  —       yes
+  Q5     hash join + quantifier      yes   yes    yes    —      —      yes    yes  yes  join    yes
+  Q6     hash join, 3-col rows       yes   yes    yes    —      —      yes    yes  yes  join    yes
+  Q7     join + scalar agg           yes   yes    yes    —      —      yes    yes  yes  join    yes
+  Q8     self-join + scalar agg      yes   yes    yes    —      —      yes    yes  yes  join    yes
+  Q9     keyed group-by aggs         yes   yes    yes    yes    —      yes    yes  yes  seg     yes
+  Q10    group-by + HAVING filter    yes   yes    yes    yes    —      yes    yes  yes  seg     yes
+  Q11    group-by + order-by + k     yes   yes    yes    yes    —      yes    yes  yes  seg     yes
+  Q12    windowed grouped slice      yes   yes    yes    yes    yes    yes    yes  yes  seg     yes
+  =====  ==========================  ====  =====  =====  =====  =====  =====  ===  ===  ======  =======
 
 (Q9/Q10 are "ordered: yes" in the sense that adding ``order by`` /
 ``limit`` clauses to their templates lowers and serves; Q9's ``avg``
@@ -151,9 +169,11 @@ from collections import OrderedDict
 from typing import Optional, Sequence, Union
 
 from repro.core import algebra as A
+from repro.core import persist as persist_mod
 from repro.core import xdm
+from repro.core.errors import InvalidArgumentError
 from repro.core.executor import (CompiledPlan, ExecConfig, Executor,
-                                 ResultSet)
+                                 ResultSet, resolve_kernel_policy)
 from repro.core.obs import trace as obs_trace
 from repro.core.obs.metrics import (MetricsRegistry, stats_diff,
                                     stats_snapshot)
@@ -190,10 +210,24 @@ class ServiceStats:
     exact_misses: int = 0   # new binding (shared plan may still hit)
     batches: int = 0        # batched device dispatches
     batched_requests: int = 0   # requests served by those dispatches
+    # persistent compiled-plan cache (core/persist.py): disk loads
+    # that skipped a compile, clean disk misses, entries rejected as
+    # unsafe (torn/corrupt/foreign-fingerprint — deleted, recompiled),
+    # and successful disk writes
+    persist_hits: int = 0
+    persist_misses: int = 0
+    persist_invalidations: int = 0
+    persist_stores: int = 0
     # regrowth events per ExecConfig cap (scan_cap/join_bucket/...),
     # keyed by the OVERFLOW_FLAGS registry's knob names — the
     # "overflow-by-cap" metric (obs/metrics.REGISTERED_STATS)
     overflows_by_cap: dict = dataclasses.field(default_factory=dict)
+    # evictions attributed per LRU-bounded service cache ("plans",
+    # "profile_plans", "bindings", "good_cfg", "sig_history",
+    # "row_cost", "persist") — ``evictions`` above counts only the
+    # level-1 plan cache and stays for compatibility; the rest used
+    # to evict silently
+    evictions_by_cache: dict = dataclasses.field(default_factory=dict)
 
     @property
     def hit_rate(self) -> float:
@@ -219,6 +253,9 @@ class QueryService:
     (non-overflow) ResultSet or raises QueryOverflowError.
     ``parameterize=False`` restores the exact-signature cache (every
     constant-variant compiles separately) — kept for ablation.
+    ``persist_dir`` attaches the disk-backed persistent plan cache
+    (``persist_max_bytes`` bounds it); ``warmup(templates)`` pre-loads
+    the workload mix at boot.
     """
 
     def __init__(self, db: xdm.Database,
@@ -228,10 +265,29 @@ class QueryService:
                  cache_capacity: int = 64, parameterize: bool = True,
                  binding_stats_capacity: int = 4096,
                  pushdown_topk: bool = True, verify: bool = True,
-                 tracer=None):
-        assert growth > 1, "capacity growth must be geometric"
-        assert cache_capacity >= 1
-        assert binding_stats_capacity >= 1
+                 tracer=None, persist_dir: Optional[str] = None,
+                 persist_max_bytes: Optional[int] = None):
+        # typed validation, not assert: these are user-facing knobs
+        # and must still diagnose under ``python -O``
+        if growth <= 1:
+            raise InvalidArgumentError(
+                f"growth={growth}: capacity growth must be geometric "
+                f"(> 1), or the regrowth ladder cannot make progress")
+        if cache_capacity < 1:
+            raise InvalidArgumentError(
+                f"cache_capacity={cache_capacity}: the compiled-plan "
+                f"cache needs at least one slot")
+        if binding_stats_capacity < 1:
+            raise InvalidArgumentError(
+                f"binding_stats_capacity={binding_stats_capacity}: "
+                f"the binding-stats cache needs at least one slot")
+        if max_retries < 0:
+            raise InvalidArgumentError(
+                f"max_retries={max_retries} must be >= 0")
+        if persist_max_bytes is not None and persist_max_bytes < 0:
+            raise InvalidArgumentError(
+                f"persist_max_bytes={persist_max_bytes} must be "
+                f">= 0 (or None for unbounded)")
         self.db = db
         self.base_config = config or ExecConfig()
         self.mode = mode
@@ -274,6 +330,30 @@ class QueryService:
         # keys + compiles profile variants (executor profile=True)
         # separately from serving variants
         self._profile_mode = False
+        # profile variants live in their OWN bounded cache: repeated
+        # explain(profile=True) calls must never evict hot warm-path
+        # executables from the serving cache below (the old shared-LRU
+        # bug), and profile entries are never persisted to disk
+        self._profile_cache: OrderedDict[tuple, CompiledPlan] = \
+            OrderedDict()
+        # disk-backed persistent compiled-plan cache (core/persist.py).
+        # When enabled, compilations go ahead-of-time (executor
+        # aot=True) so the executable is a serializable value; loads
+        # are fingerprint-checked (jax/jaxlib/backend/device, kernel
+        # env, mode, partitions, db digest) so a foreign environment's
+        # entry is invalidated and recompiled, never served
+        self._persist = None
+        self._fingerprint: Optional[dict] = None
+        if persist_dir is not None:
+            self._persist = persist_mod.PlanDiskCache(
+                persist_dir, max_bytes=persist_max_bytes)
+            self._fingerprint = persist_mod.service_fingerprint(
+                db, self.executor.tables, mode,
+                self.executor.num_partitions)
+            self.metrics.gauge(
+                "persist_entries",
+                help="entries in the disk-backed compiled-plan cache",
+                fn=lambda: self._persist.info().entries)
         # level-1 cache: erased signature -> compiled plan, LRU-bounded
         self._cache: OrderedDict[tuple, CompiledPlan] = OrderedDict()
         # level-2, stats only: exact (signature, binding) -> hit count,
@@ -409,21 +489,53 @@ class QueryService:
     def compiled(self, plan: A.Op, cfg: ExecConfig,
                  sig: Optional[str] = None, param_specs: tuple = (),
                  batch: Optional[int] = None) -> CompiledPlan:
-        profile = self._profile_mode
         sig = sig if sig is not None else repr(plan)
-        key = self._key(sig, cfg, batch, profile)
+        if self._profile_mode:
+            # profile variants: own bounded cache, never persisted,
+            # and no serving-cache counter traffic — explain() is a
+            # diagnostic, not a serving event
+            key = self._key(sig, cfg, batch, True)
+            cp = self._profile_cache.get(key)
+            if cp is not None:
+                self._profile_cache.move_to_end(key)
+                return cp
+            cp = self._compile(plan, cfg, sig, param_specs, batch,
+                               profile=True)
+            self._profile_cache[key] = cp
+            self._evict(self._profile_cache, self.cache_capacity,
+                        "profile_plans")
+            return cp
+        key = self._key(sig, cfg, batch, False)
         cp = self._cache.get(key)
         if cp is not None:
             self._cache.move_to_end(key)
             self.stats.cache_hits += 1
             return cp
         self.stats.cache_misses += 1
+        cp = self._persist_load(plan, cfg, sig, param_specs, batch)
+        if cp is None:
+            cp = self._compile(plan, cfg, sig, param_specs, batch,
+                               profile=False)
+            self._persist_store(cp, sig, batch)
+        self._cache[key] = cp
+        before = len(self._cache)
+        self._evict(self._cache, self.cache_capacity, "plans")
+        self.stats.evictions += before - len(self._cache)
+        return cp
+
+    def _compile(self, plan: A.Op, cfg: ExecConfig, sig: str,
+                 param_specs: tuple, batch: Optional[int],
+                 profile: bool) -> CompiledPlan:
+        """One real trace+compile (the only site). AOT (lower+compile
+        to a concrete executable) when persistence is on, so the
+        result is serializable; profile variants always go the lazy
+        route — they are never persisted."""
         t0 = time.perf_counter()  # lint: allow(DET001) — compile-time metric, cold path only
         with self.tracer.span("compile", cat="service") as span:
-            cp = self.executor.compile(plan, mode=self.mode,
-                                       mesh=self.mesh, config=cfg,
-                                       param_specs=param_specs,
-                                       batch=batch, profile=profile)
+            cp = self.executor.compile(
+                plan, mode=self.mode, mesh=self.mesh, config=cfg,
+                param_specs=param_specs, batch=batch, profile=profile,
+                aot=self._persist is not None and not profile)
             span.set(sig=sig_digest(sig), batch=batch,
                      profile=profile)
         # counted after the compile succeeds, so `stats.compiles` stays
@@ -435,11 +547,70 @@ class QueryService:
         h = self._history_for(sig)
         h["compiles"] += 1
         h["compile_s"] += time.perf_counter() - t0  # lint: allow(DET001)
-        self._cache[key] = cp
-        while len(self._cache) > self.cache_capacity:
-            self._cache.popitem(last=False)
-            self.stats.evictions += 1
         return cp
+
+    # -- persistent cache plumbing ---------------------------------------
+
+    def _persist_load(self, plan: A.Op, cfg: ExecConfig, sig: str,
+                      param_specs: tuple,
+                      batch: Optional[int]) -> Optional[CompiledPlan]:
+        """Disk probe for one compiled variant. Any unsafe state —
+        corrupt file, foreign fingerprint, undeserializable payload —
+        invalidates the entry and returns None (the caller compiles),
+        so the persistent tier can degrade but never mis-serve."""
+        if self._persist is None:
+            return None
+        rcfg = resolve_kernel_policy(plan, cfg)
+        pkey = persist_mod.entry_key(sig, rcfg, self.mode,
+                                     self.executor.num_partitions,
+                                     batch)
+        status, entry = self._persist.lookup(pkey, self._fingerprint)
+        if status == "invalid":
+            self.stats.persist_invalidations += 1
+            return None
+        if status == "miss":
+            self.stats.persist_misses += 1
+            return None
+        try:
+            fn = persist_mod.load_executable(entry)
+        except Exception:
+            self._persist.invalidate(pkey)
+            self.stats.persist_invalidations += 1
+            return None
+        self.stats.persist_hits += 1
+        self.tracer.event("persist-hit", cat="service",
+                          sig=sig_digest(sig), batch=batch)
+        return CompiledPlan(fn, entry["schema"], plan, config=rcfg,
+                            mode=self.mode,
+                            param_specs=tuple(param_specs),
+                            batch=batch)
+
+    def _persist_store(self, cp: CompiledPlan, sig: str,
+                       batch: Optional[int]) -> None:
+        """Persist a freshly compiled serving variant (best-effort: a
+        non-serializable executable or a failing disk skips the store,
+        serving is unaffected)."""
+        if self._persist is None or cp.donated:
+            return
+        entry = persist_mod.pack_compiled(cp)
+        if entry is None:
+            return
+        pkey = persist_mod.entry_key(sig, cp.config, self.mode,
+                                     self.executor.num_partitions,
+                                     batch)
+        pruned = self._persist.store(pkey, self._fingerprint, entry)
+        if pruned is None:
+            return
+        self.stats.persist_stores += 1
+        if pruned:
+            self.stats.evictions_by_cache["persist"] = \
+                self.stats.evictions_by_cache.get("persist", 0) + pruned
+
+    def persist_info(self):
+        """``persist.DiskCacheInfo`` of the attached disk cache, or
+        None when persistence is off."""
+        return (self._persist.info() if self._persist is not None
+                else None)
 
     def cache_size(self) -> int:
         return len(self._cache)
@@ -454,11 +625,23 @@ class QueryService:
         second cache level (template-skew observability)."""
         return dict(self._bindings)
 
+    def _evict(self, od: OrderedDict, capacity: int,
+               cache_name: str) -> None:
+        """LRU-bound one of the service's OrderedDict caches,
+        attributing every eviction to its per-cache counter
+        (``evictions_by_cache`` — OBS001-registered). The bounded
+        maps used to popitem silently, so cache pressure on e.g. the
+        known-good-config map was invisible to operators."""
+        while len(od) > capacity:
+            od.popitem(last=False)
+            self.stats.evictions_by_cache[cache_name] = \
+                self.stats.evictions_by_cache.get(cache_name, 0) + 1
+
     def _note_good_cfg(self, sig: str, cfg: ExecConfig) -> None:
         self._good_cfg[sig] = cfg
         self._good_cfg.move_to_end(sig)
-        while len(self._good_cfg) > self._good_cfg_capacity:
-            self._good_cfg.popitem(last=False)
+        self._evict(self._good_cfg, self._good_cfg_capacity,
+                    "good_cfg")
 
     def _history_for(self, sig: str) -> dict:
         """Per-signature compile/regrowth history (explain's
@@ -468,8 +651,8 @@ class QueryService:
         if h is None:
             h = {"compiles": 0, "compile_s": 0.0, "regrowths": []}
             self._sig_history[sig] = h
-            while len(self._sig_history) > self._good_cfg_capacity:
-                self._sig_history.popitem(last=False)
+            self._evict(self._sig_history, self._good_cfg_capacity,
+                        "sig_history")
         return h
 
     def _note_regrow(self, sig: str, old: ExecConfig,
@@ -493,8 +676,8 @@ class QueryService:
         if seen is None:
             self.stats.exact_misses += 1
             self._bindings[key] = 1
-            while len(self._bindings) > self._bindings_capacity:
-                self._bindings.popitem(last=False)
+            self._evict(self._bindings, self._bindings_capacity,
+                        "bindings")
         else:
             self.stats.exact_hits += 1
             self._bindings[key] = seen + 1
@@ -805,6 +988,69 @@ class QueryService:
                 results[i] = rs
         return results
 
+    # -- warmup ------------------------------------------------------------
+
+    def warmup(self, templates: Sequence,
+               batches: Sequence[int] = ()) -> dict:
+        """Pre-trace the known workload mix at boot: prepare every
+        template and materialize its compiled executable — loading
+        from the persistent disk cache when one is attached and warm
+        (zero compiles), compiling (and storing) otherwise — so the
+        first real request of each template is a pure in-memory cache
+        hit, never a trace+XLA-compile.
+
+        ``templates`` entries are queries (text / plan /
+        ``PreparedQuery``) or ``(query, batch_width)`` pairs; each
+        entry warms its scalar variant plus the entry's own batch
+        width, and ``batches`` adds extra batch widths warmed for
+        every parameterized template (the bucket ladder the serving
+        runtime is expected to dispatch). Parameterless plans have no
+        batched variant and skip the widths. Capacities come from the
+        same known-good/presized configs serving would use, so the
+        warmed executables ARE the ones requests hit.
+
+        Returns a summary dict: templates prepared, variants warmed,
+        compiles actually paid, persist/in-memory hits, and wall
+        seconds."""
+        t0 = time.perf_counter()  # lint: allow(DET001) — boot-time metric, not on the serving path
+        snap = self.stats.snapshot()
+        warmed = 0
+        seen: set[tuple] = set()
+        with self.tracer.span("warmup", cat="service") as span:
+            for entry in templates:
+                q, width = (entry if isinstance(entry, tuple)
+                            else (entry, None))
+                if width is not None and (not isinstance(width, int)
+                                          or width < 1):
+                    raise InvalidArgumentError(
+                        f"warmup batch width {width!r} must be a "
+                        f"positive int")
+                pq = self.prepare(q)
+                cfg = (self._good_cfg.get(pq.signature)
+                       or self._presized_config(pq.plan))
+                widths: list = [None]
+                if pq.specs:
+                    widths += [w for w in (*batches, width)
+                               if w is not None]
+                for w in widths:
+                    k = (pq.signature, w)
+                    if k in seen:
+                        continue
+                    seen.add(k)
+                    self.compiled(pq.plan, cfg, sig=pq.signature,
+                                  param_specs=pq.specs, batch=w)
+                    warmed += 1
+            span.set(variants=warmed)
+        d = self.stats.diff(snap)
+        return {
+            "templates": len(set(s for s, _ in seen)),
+            "variants": warmed,
+            "compiles": d.compiles,
+            "persist_hits": d.persist_hits,
+            "cache_hits": d.cache_hits,
+            "seconds": time.perf_counter() - t0,  # lint: allow(DET001)
+        }
+
     # -- async multi-tenant frontend ---------------------------------------
 
     def runtime(self, **kwargs):
@@ -888,8 +1134,8 @@ class QueryService:
                     cost = round_cap(bound)
             cost = cost or self._scan_ceiling
             self._row_cost[sig] = cost
-            while len(self._row_cost) > self._good_cfg_capacity:
-                self._row_cost.popitem(last=False)
+            self._evict(self._row_cost, self._good_cfg_capacity,
+                        "row_cost")
         return cost
 
     def row_cost_for_signature(self, sig: str) -> int:
